@@ -1,0 +1,31 @@
+"""Roofline summary rows from the dry-run artifact directory (§Roofline
+feed: one row per (arch, shape, mesh) with the three terms + dominant)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DIR = Path("results/dryrun")
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for p in sorted(DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        tag = p.stem
+        rows.append((
+            f"roofline/{tag}/bound_us",
+            max(rl["compute_s"], rl["memory_s"], rl["collective_s"]) * 1e6,
+            f"dom={rl['dominant']};useful={rl['useful_flops_fraction']:.3f};"
+            f"frac={rl['roofline_fraction']:.4f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, extra in run():
+        print(f"{name},{val:.1f},{extra}")

@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,fig4]
+
+Prints ``name,value,derived`` CSV rows (value unit embedded in the name).
+fig3 consumes/produces dry-run artifacts under results/dryrun (lowering the
+missing ones in a 512-device subprocess); everything else runs live here.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else [
+        "fig2_parity", "fig3_collective_abi", "fig4_import_problem",
+        "fig5_tuned_kernel", "roofline_summary",
+    ]
+    failed = 0
+    for name in names:
+        short = name.split("_")[0]
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row_name, value, derived in mod.run():
+                print(f"{row_name},{value:.3f},{derived}")
+        except Exception:
+            failed += 1
+            print(f"{short}/ERROR,0,{traceback.format_exc(limit=2)!r}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

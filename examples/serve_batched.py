@@ -1,0 +1,39 @@
+"""Serve a small model with batched requests through the container runtime.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+from repro.launch.serve import main as serve_main
+
+IMAGEFILE = """
+FROM scratch
+ARCH llama3.2-3b n_layers=6 d_model=384 n_heads=6 n_kv_heads=2 head_dim=64 d_ff=1024 vocab_size=32000
+SHAPE decode_32k seq_len=256 global_batch=8
+MESH local
+PRECISION params=float32 compute=bfloat16
+COLLECTIVES generic
+LABEL tier=example purpose=serving
+"""
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="stevedore-serve-")
+    imagefile = Path(tmp) / "Imagefile"
+    imagefile.write_text(IMAGEFILE)
+    serve_main([
+        "--image", str(imagefile),
+        "--root", tmp,
+        "--requests", "8",
+        "--prompt-len", "64",
+        "--gen", "32",
+    ])
+
+
+if __name__ == "__main__":
+    main()

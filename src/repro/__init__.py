@@ -1,0 +1,20 @@
+"""Stevedore: container-inspired environment runtime for multi-pod JAX training/serving.
+
+Reproduction + TPU-native extension of:
+  "Containers for portable, productive and performant scientific computing"
+  (Hale, Li, Richardson, Wells; 2016).
+
+The paper's layered-image / registry / swappable-ABI / import-cache ideas are
+implemented as first-class features of a JAX training & serving framework:
+
+  repro.core       -- EnvImage, Imagefile, Registry, Container, CollectiveABI,
+                      CompileCache, Platform runtimes
+  repro.models     -- the 10-architecture model zoo (dense / MoE / SSM / hybrid)
+  repro.dist       -- mesh + logical-axis sharding rules
+  repro.train      -- optimizer, train-step builders (implicit & explicit ABI)
+  repro.serve      -- prefill / decode steps with KV + SSM caches
+  repro.kernels    -- Pallas TPU kernels (validated via interpret=True on CPU)
+  repro.launch     -- production mesh, multi-pod dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

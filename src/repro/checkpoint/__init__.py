@@ -1,0 +1,5 @@
+from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint.elastic import reshard_restore
+from repro.checkpoint.straggler import StragglerMonitor
+
+__all__ = ["CheckpointStore", "reshard_restore", "StragglerMonitor"]

@@ -1,0 +1,155 @@
+"""Content-addressed checkpoint store with async save and atomic publish.
+
+Same storage discipline as the image registry (paper §2.2's layered file
+system applied to training state):
+
+* every tensor is stored once under ``blobs/<sha256>`` -- consecutive
+  checkpoints share unchanged tensors (embedding tables that stopped
+  updating, frozen frontends, optimizer step scalars...), so checkpoint k+1
+  costs only its delta, exactly like pushing a derived image;
+* a checkpoint is a JSON *manifest* mapping tree paths -> (blob, shape,
+  dtype), published atomically via rename, so a crash mid-save can never
+  corrupt the latest checkpoint (fault-tolerance requirement);
+* saves run on a background thread (training continues; ``wait()`` joins
+  before the next save or at exit).
+
+Restore returns numpy trees; Container/elastic.py device_puts them with the
+target mesh's shardings (which is how elastic re-sharding falls out for
+free: the store is layout-agnostic).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _tree_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+class CheckpointStore:
+    def __init__(self, root: str | os.PathLike):
+        self.root = Path(root)
+        (self.root / "blobs").mkdir(parents=True, exist_ok=True)
+        (self.root / "manifests").mkdir(parents=True, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self.last_stats: dict | None = None
+
+    # -- save --------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = False) -> None:
+        """Snapshot to host (numpy) synchronously, write blobs async."""
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+        if blocking:
+            self._write(step, host_tree)
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree) -> None:
+        t0 = time.perf_counter()
+        manifest: dict[str, Any] = {"step": step, "tensors": {}}
+        new_blobs = reused = new_bytes = 0
+        for path, leaf in _tree_paths(host_tree):
+            # NOTE: np.ascontiguousarray promotes 0-d -> 1-d; keep the rank
+            arr = np.asarray(leaf, order="C")
+            digest = hashlib.sha256(arr.tobytes()).hexdigest()
+            blob = self.root / "blobs" / digest
+            if not blob.exists():
+                tmp = blob.with_suffix(".tmp")
+                with open(tmp, "wb") as f:
+                    np.save(f, arr, allow_pickle=False)
+                os.replace(tmp, blob)
+                new_blobs += 1
+                new_bytes += arr.nbytes
+            else:
+                reused += 1
+            manifest["tensors"][path] = {
+                "blob": digest,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        mpath = self.root / "manifests" / f"step-{step:010d}.json"
+        tmp = mpath.with_suffix(".tmp")
+        tmp.write_text(json.dumps(manifest))
+        os.replace(tmp, mpath)          # atomic publish
+        latest = self.root / "LATEST"
+        ltmp = latest.with_suffix(".tmp")
+        ltmp.write_text(mpath.name)
+        os.replace(ltmp, latest)
+        self.last_stats = {
+            "step": step, "new_blobs": new_blobs, "reused_blobs": reused,
+            "new_bytes": new_bytes, "seconds": time.perf_counter() - t0,
+        }
+
+    # -- restore --------------------------------------------------------------
+    def steps(self) -> list[int]:
+        return sorted(
+            int(p.stem.split("-")[1]) for p in (self.root / "manifests").glob("step-*.json")
+        )
+
+    def latest_step(self) -> int | None:
+        latest = self.root / "LATEST"
+        if not latest.exists():
+            return None
+        return int(latest.read_text().strip().split("-")[1].split(".")[0])
+
+    def restore(self, template, step: int | None = None):
+        """Load into the structure of ``template`` (numpy leaves)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.root}")
+        manifest = json.loads(
+            (self.root / "manifests" / f"step-{step:010d}.json").read_text())
+        tensors = manifest["tensors"]
+
+        flat = jax.tree_util.tree_flatten_with_path(template)
+        leaves, treedef = flat
+        out = []
+        for kp, leaf in leaves:
+            path = jax.tree_util.keystr(kp)
+            if path not in tensors:
+                raise KeyError(f"checkpoint step {step} missing tensor {path}")
+            meta = tensors[path]
+            arr = np.load(self.root / "blobs" / meta["blob"], allow_pickle=False)
+            arr = arr.reshape(tuple(meta["shape"]))
+            want = tuple(getattr(leaf, "shape", ()))
+            if want != tuple(arr.shape):
+                raise ValueError(
+                    f"{path}: checkpoint shape {arr.shape} != template {want}")
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, [a for a in out])
+
+    def gc(self, keep_last: int = 3) -> int:
+        """Drop old manifests + unreferenced blobs; returns blobs removed."""
+        steps = self.steps()
+        drop = steps[:-keep_last] if keep_last else steps
+        for s in drop:
+            (self.root / "manifests" / f"step-{s:010d}.json").unlink(missing_ok=True)
+        live: set[str] = set()
+        for p in (self.root / "manifests").glob("step-*.json"):
+            m = json.loads(p.read_text())
+            live.update(t["blob"] for t in m["tensors"].values())
+        removed = 0
+        for blob in (self.root / "blobs").iterdir():
+            if blob.name not in live:
+                blob.unlink()
+                removed += 1
+        return removed

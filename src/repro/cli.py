@@ -1,0 +1,119 @@
+"""stevedore: the docker-shaped CLI over the Runtime (paper §3.2).
+
+  PYTHONPATH=src python -m repro.cli build -t stable Imagefile
+  PYTHONPATH=src python -m repro.cli images
+  PYTHONPATH=src python -m repro.cli history stable
+  PYTHONPATH=src python -m repro.cli run stable --platform local --steps 5
+  PYTHONPATH=src python -m repro.cli ps
+  PYTHONPATH=src python -m repro.cli tag <digest> prod
+
+The paper's observation (§3.2) is that raw runtime CLIs are too low-level
+for scientists, so projects ship a wrapper (`fenicsproject notebook ...`).
+This is that wrapper: `run` wires the data pipeline, checkpoint store and
+straggler monitor so one command reproduces the launch/train.py driver.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.core.runtime import Runtime
+
+
+def cmd_build(rt: Runtime, args) -> int:
+    text = Path(args.imagefile).read_text()
+    image = rt.build(text, tag=args.tag)
+    print(f"built {image.short_digest}" + (f" (tag: {args.tag})" if args.tag else ""))
+    for digest, kind, summary in image.history():
+        print(f"  {digest} {kind:12s} {summary}")
+    return 0
+
+
+def cmd_images(rt: Runtime, args) -> int:
+    for rec in rt.images():
+        tags = ",".join(rec["tags"]) or "<none>"
+        print(f"{rec['digest']}  {tags}")
+    return 0
+
+
+def cmd_history(rt: Runtime, args) -> int:
+    image = rt.pull(args.ref)
+    for digest, kind, summary in image.history():
+        print(f"{digest} {kind:12s} {summary}")
+    return 0
+
+
+def cmd_tag(rt: Runtime, args) -> int:
+    rt.registry.tag(args.ref, args.tag)
+    print(f"{args.tag} -> {rt.registry.resolve(args.tag)[:12]}")
+    return 0
+
+
+def cmd_ps(rt: Runtime, args) -> int:
+    for rec in rt.ps():
+        print(f"{rec['id'][:24]:26s} {rec['arch']:24s} "
+              f"{rec.get('cell') or '-':12s} {rec['platform']:9s} "
+              f"{rec.get('abi','')}")
+    return 0
+
+
+def cmd_run(rt: Runtime, args) -> int:
+    from repro.launch.train import main as train_main
+    argv = ["--image", args.ref, "--root", str(rt.root),
+            "--steps", str(args.steps)]
+    if args.platform:
+        argv += ["--platform", args.platform]
+    if args.resume:
+        argv += ["--resume"]
+    train_main(argv)
+    return 0
+
+
+def cmd_inspect(rt: Runtime, args) -> int:
+    image = rt.pull(args.ref)
+    print(json.dumps(image.config(), indent=2))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="stevedore")
+    ap.add_argument("--root", default=".stevedore")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("build", help="build an image from an Imagefile")
+    p.add_argument("imagefile")
+    p.add_argument("-t", "--tag", default=None)
+
+    sub.add_parser("images", help="list images")
+
+    p = sub.add_parser("history", help="show image layers")
+    p.add_argument("ref")
+
+    p = sub.add_parser("inspect", help="show merged image config")
+    p.add_argument("ref")
+
+    p = sub.add_parser("tag", help="tag an image")
+    p.add_argument("ref")
+    p.add_argument("tag")
+
+    sub.add_parser("ps", help="list containers (overlays)")
+
+    p = sub.add_parser("run", help="run training from an image")
+    p.add_argument("ref")
+    p.add_argument("--platform", default=None)
+    p.add_argument("--steps", type=int, default=10)
+    p.add_argument("--resume", action="store_true")
+
+    args = ap.parse_args(argv)
+    rt = Runtime(args.root)
+    return {
+        "build": cmd_build, "images": cmd_images, "history": cmd_history,
+        "tag": cmd_tag, "ps": cmd_ps, "run": cmd_run, "inspect": cmd_inspect,
+    }[args.cmd](rt, args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

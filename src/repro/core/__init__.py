@@ -1,0 +1,36 @@
+"""The paper's primary contribution: container-style environment runtime.
+
+EnvImage/Imagefile/Registry  -- layered content-addressed images (paper §2)
+Container/Runtime            -- runtime instantiation + writable overlay (§3)
+CollectiveABI                -- swappable generic/host collectives (§3.3/§4.2)
+CompileCache                 -- the Python-import-problem fix (§4.2/Fig.4)
+
+Lazy attribute resolution keeps submodules (train <-> core.abi) cycle-free.
+"""
+
+_EXPORTS = {
+    "CollectiveABI": "repro.core.abi",
+    "abi_from_image_config": "repro.core.abi",
+    "make_abi": "repro.core.abi",
+    "CompileCache": "repro.core.compile_cache",
+    "Container": "repro.core.container",
+    "EnvImage": "repro.core.image",
+    "ImageBuilder": "repro.core.image",
+    "Layer": "repro.core.image",
+    "parse_imagefile": "repro.core.imagefile",
+    "render_imagefile": "repro.core.imagefile",
+    "Registry": "repro.core.registry",
+    "TransferStats": "repro.core.registry",
+    "Runtime": "repro.core.runtime",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        mod = importlib.import_module(_EXPORTS[name])
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -1,0 +1,182 @@
+"""CompileCache: the TPU-world answer to the paper's 'Python import problem'.
+
+Paper §4.2 / Fig. 4: at 1000 MPI processes, every process imports thousands of
+small Python files from a parallel FS -> ~30 min of startup. Containers fix it
+because the image is ONE large file mounted per node.
+
+The multi-pod JAX analog: every *host* in a 1000-host job traces, lowers and
+compiles the train step -- minutes of redundant work per host, identical on
+all of them. The fix is the same shape as the paper's: persist the artifact
+once, keyed by content hash, and have every other host load one big file.
+
+Cache levels (best effort, graceful degradation):
+
+  L1  serialized compiled executable (``jax.experimental.serialize_executable``)
+      -> deserialize_and_load skips trace+lower+compile entirely;
+  L2  StableHLO text of the lowered module
+      -> skips trace+lower (the Python-heavy part), recompiles natively;
+  L0  miss -> full trace+lower+compile, then populate L1+L2.
+
+Keys: sha256 over (image digest, step kind, mesh fingerprint, abstract input
+signature, jax/jaxlib versions, backend) -- the exact analog of an image
+digest pinning a bit-exact environment. A key never collides across meshes or
+framework versions, so a cache is safely shareable cluster-wide (the paper's
+registry role).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pickle
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+
+try:  # L1 support
+    from jax.experimental import serialize_executable as _se
+    _HAVE_SERIALIZE = True
+except Exception:  # pragma: no cover
+    _HAVE_SERIALIZE = False
+
+
+def mesh_fingerprint(mesh: jax.sharding.Mesh) -> str:
+    return json.dumps(
+        {"axes": list(mesh.axis_names), "shape": [int(s) for s in mesh.devices.shape],
+         "ndev": int(mesh.devices.size)},
+        sort_keys=True,
+    )
+
+
+def abstract_signature(args_tree: Any) -> str:
+    leaves, treedef = jax.tree.flatten(args_tree)
+    sig = [
+        (list(map(int, getattr(l, "shape", ()))), str(getattr(l, "dtype", type(l).__name__)))
+        for l in leaves
+    ]
+    return json.dumps({"tree": str(treedef), "leaves": sig})
+
+
+@dataclass
+class CacheStats:
+    hits_l1: int = 0
+    hits_l2: int = 0
+    misses: int = 0
+    last_level: str = ""
+    last_seconds: float = 0.0
+
+
+class CompileCache:
+    def __init__(self, root: str | os.PathLike):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.stats = CacheStats()
+
+    # -- keying --------------------------------------------------------------
+    def key(self, *, image_digest: str, step_kind: str, mesh: jax.sharding.Mesh,
+            args_tree: Any) -> str:
+        body = json.dumps(
+            {
+                "image": image_digest,
+                "step": step_kind,
+                "mesh": mesh_fingerprint(mesh),
+                "sig": abstract_signature(args_tree),
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+            },
+            sort_keys=True,
+        )
+        return hashlib.sha256(body.encode()).hexdigest()
+
+    def _paths(self, key: str) -> tuple[Path, Path, Path]:
+        return (
+            self.root / f"{key}.exec",       # L1: pickled serialized executable
+            self.root / f"{key}.stablehlo",  # L2: lowered module text
+            self.root / f"{key}.meta.json",
+        )
+
+    # -- main entry ------------------------------------------------------------
+    def get_or_build(
+        self,
+        key: str,
+        lower_fn: Callable[[], Any],
+        *,
+        want_executable: bool = True,
+    ):
+        """Return a compiled executable for ``key``.
+
+        ``lower_fn()`` must return a ``jax.stages.Lowered``. On a miss we
+        lower+compile and persist both cache levels.
+        """
+        p_exec, p_hlo, p_meta = self._paths(key)
+
+        # L1: full executable
+        if want_executable and _HAVE_SERIALIZE and p_exec.exists():
+            t0 = time.perf_counter()
+            try:
+                payload = pickle.loads(p_exec.read_bytes())
+                compiled = _se.deserialize_and_load(
+                    payload["serialized"], payload["in_tree"], payload["out_tree"]
+                )
+                self.stats.hits_l1 += 1
+                self.stats.last_level = "L1"
+                self.stats.last_seconds = time.perf_counter() - t0
+                return compiled
+            except Exception:
+                p_exec.unlink(missing_ok=True)  # stale/incompatible: fall through
+
+        t0 = time.perf_counter()
+        lowered = lower_fn()
+        compiled = lowered.compile()
+        elapsed = time.perf_counter() - t0
+        self.stats.misses += 1
+        self.stats.last_level = "L0"
+        self.stats.last_seconds = elapsed
+
+        # populate caches (best effort)
+        try:
+            _atomic_bytes(p_hlo, lowered.as_text().encode())
+        except Exception:
+            pass
+        if _HAVE_SERIALIZE:
+            try:
+                serialized, in_tree, out_tree = _se.serialize(compiled)
+                _atomic_bytes(
+                    p_exec,
+                    pickle.dumps(
+                        {"serialized": serialized, "in_tree": in_tree, "out_tree": out_tree}
+                    ),
+                )
+            except Exception:
+                pass
+        _atomic_bytes(
+            p_meta,
+            json.dumps(
+                {"built_seconds": elapsed, "jax": jax.__version__,
+                 "backend": jax.default_backend()}
+            ).encode(),
+        )
+        return compiled
+
+    def lowered_text(self, key: str) -> str | None:
+        """L2 read: the persisted StableHLO (for offline roofline analysis)."""
+        p = self._paths(key)[1]
+        return p.read_text() if p.exists() else None
+
+    def has(self, key: str) -> bool:
+        p_exec, p_hlo, _ = self._paths(key)
+        return p_exec.exists() or p_hlo.exists()
+
+    def evict(self, key: str) -> None:
+        for p in self._paths(key):
+            p.unlink(missing_ok=True)
+
+
+def _atomic_bytes(path: Path, data: bytes) -> None:
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    tmp.write_bytes(data)
+    os.replace(tmp, path)

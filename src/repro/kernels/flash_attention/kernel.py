@@ -1,0 +1,142 @@
+"""Flash-attention forward Pallas TPU kernel (FlashAttention-2 schedule).
+
+TPU adaptation (vs the CUDA original):
+
+* The grid is (batch*q_heads, q_blocks, kv_blocks) with the KV dimension
+  INNERMOST: on TPU, grid steps execute sequentially on a core, so VMEM
+  scratch (m, l, acc) carries the online-softmax state across KV blocks --
+  the role warp-level registers play on GPU.
+* Block shapes are MXU/VPU aligned: q/kv blocks are multiples of 128 in the
+  sequence dim; head_dim rides the 128-lane minor axis. For v5e (~16 MiB
+  VMEM/core) the default 512x512 blocks use
+      q 512xd*2B + k,v 512xd*2B*2 + s 512x512x4B + acc 512xd*4B  ~ 2.3 MiB
+  at d=128 -- leaving headroom for double-buffered pipelines.
+* GQA is expressed in the BlockSpec index maps: the kv block index ignores
+  the intra-group component of the head index, so KV is never physically
+  replicated (bandwidth, not copies).
+* Causality/window are handled two ways, mirroring the XLA oracle:
+  fully-masked (future) KV blocks are skipped by `pl.when` (no MXU work),
+  diagonal blocks apply the elementwise mask.
+
+Backward is delegated to XLA autodiff over the oracle in ops.py (recompute
+policy); a hand-written bwd kernel is a possible follow-up and is noted in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, block_q: int, block_k: int, causal: bool,
+               window: int, sq: int, sk: int, n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # trace-level static skip is impossible (ki is dynamic) -> pl.when guard.
+    # q row r attends to k col c iff c <= r + (sk - sq) [causal]
+    #                            and c >  r + (sk - sq) - window [window]
+    off = sk - sq
+    q_lo = qi * block_q
+    k_lo = ki * block_k
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_lo + block_q - 1 + off
+    if window:
+        live &= (k_lo + block_k - 1) > q_lo + off - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)             # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)             # (block_k, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= cols <= rows + off
+        if window:
+            mask &= cols > rows + off - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        scale: float | None = None,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, d); k, v: (B, Hkv, Sk, d) -> (B, Hq, Sq, d)."""
+    B, Hq, Sq, d = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    g = Hq // Hkv
+    if scale is None:
+        scale = d ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, \
+        f"seq lens ({Sq},{Sk}) must tile by blocks ({block_q},{block_k})"
+    nq, nk = Sq // block_q, Sk // block_k
+
+    qf = q.reshape(B * Hq, Sq, d)
+    kf = k.reshape(B * Hkv, Sk, d)
+    vf = v.reshape(B * Hkv, Sk, d)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, sq=Sq, sk=Sk, n_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            # GQA: head group index folds away in the KV index map
+            pl.BlockSpec((1, block_k, d), lambda b, i, j, g=g: (b // g, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j, g=g: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),      # m (running max)
+            pltpu.VMEM((block_q, 1), jnp.float32),      # l (running denom)
+            pltpu.VMEM((block_q, d), jnp.float32),      # acc (numerator)
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, d)

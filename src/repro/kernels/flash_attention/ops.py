@@ -1,0 +1,68 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Selects block shapes from a small per-(head_dim, seq) tuning table sized for
+v5e VMEM, falls back to interpret mode off-TPU (this container), and exposes
+a custom-vjp whose backward is the XLA oracle under recompute -- the fwd
+kernel is the production hot path (decode/prefill); training backward reuses
+the chunked XLA formulation until a bwd kernel lands.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pick_blocks(seq_q: int, seq_k: int, head_dim: int) -> tuple[int, int]:
+    """v5e VMEM-sized blocks: s-block 512 fits all d<=256 comfortably;
+    shrink for short sequences (blocks must tile the sequence)."""
+    bq = 512
+    while bq > 1 and seq_q % bq:
+        bq //= 2
+    bk = 512
+    while bk > 1 and seq_k % bk:
+        bk //= 2
+    if head_dim > 128:          # d=256 (recurrentgemma): halve score tile
+        while bq > 256 and seq_q % (bq // 2) == 0:
+            bq //= 2
+        while bk > 256 and seq_k % (bk // 2) == 0:
+            bk //= 2
+    return bq, bk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,Hq,S,d); k/v: (B,Hkv,S,d). Fwd = Pallas kernel, bwd = oracle."""
+    return _fwd_impl(q, k, v, causal, window)
+
+
+def _fwd_impl(q, k, v, causal, window):
+    bq, bk = pick_blocks(q.shape[2], k.shape[2], q.shape[3])
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=bq, block_k=bk,
+                               interpret=not _on_tpu())
+
+
+def _fwd_vjp(q, k, v, causal, window):
+    out = _fwd_impl(q, k, v, causal, window)
+    return out, (q, k, v)
+
+
+def _bwd_vjp(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: flash_attention_ref(q_, k_, v_, causal=causal,
+                                               window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd_vjp, _bwd_vjp)

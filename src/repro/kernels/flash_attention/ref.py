@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True, window: int = 0,
+                        scale: float | None = None) -> jax.Array:
+    """q: (B, Hq, Sq, d); k, v: (B, Hkv, Sk, d); Hq % Hkv == 0.
+
+    Returns (B, Hq, Sq, d). Full-softmax reference in f32.
+    """
+    B, Hq, Sq, d = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    if scale is None:
+        scale = d ** -0.5
+    qg = q.reshape(B, Hkv, g, Sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) * scale
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        # q position i attends to k positions <= i + (Sk - Sq)
+        mask &= ki <= qi + (Sk - Sq)
+    if window:
+        mask &= ki > qi + (Sk - Sq) - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)        # fully-masked rows -> 0
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, Hq, Sq, d).astype(q.dtype)

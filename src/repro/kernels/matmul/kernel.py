@@ -1,0 +1,65 @@
+"""Blocked matmul Pallas TPU kernel -- the repo's HPGMG-FE analog.
+
+The paper uses HPGMG-FE (a highly tuned, AVX-dependent benchmark) to prove
+containers do not eat tuned-kernel performance (their Fig. 5) and to make
+the point that host-specific codegen must happen at run time, not bake time.
+This kernel plays that role here: a hand-blocked MXU matmul whose block
+table is selected per PLATFORM at container-run time (core/container binds
+it), never baked into the image.
+
+Schedule: grid (M/bm, N/bn, K/bk), K innermost; f32 accumulator in VMEM
+scratch across K steps; A/B tiles stream through the implicit Pallas
+double-buffered pipeline. Blocks default to 512x512x512:
+  A 512x512x2B + B 512x512x2B + acc 512x512x4B = 2 MiB (+ double buffering)
+against ~16 MiB v5e VMEM; all dims multiples of the 128x128 MXU tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_scr, *, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _store():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(a: jax.Array, b: jax.Array, *,
+                  block_m: int = 512, block_n: int = 512, block_k: int = 512,
+                  interpret: bool = False) -> jax.Array:
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    block_m, block_n, block_k = (min(block_m, M), min(block_n, N),
+                                 min(block_k, K))
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    grid = (M // block_m, N // block_n, K // block_k)
+    kernel = functools.partial(_mm_kernel, n_k=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,33 @@
+"""jit'd wrapper with the per-platform block table (run-time binding --
+the kernel-analog of the paper's 'compile HPGMG on the host, inside the
+container' guidance)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.matmul.kernel import matmul_pallas
+
+# platform -> (block_m, block_n, block_k); chosen for VMEM size & MXU shape
+BLOCK_TABLE = {
+    "tpu-v5e": (512, 512, 512),
+    "tpu-v4": (512, 1024, 512),
+    "cpu-interpret": (128, 128, 128),   # keep interpret-mode tests fast
+}
+
+
+def _platform() -> str:
+    return "tpu-v5e" if jax.default_backend() == "tpu" else "cpu-interpret"
+
+
+def matmul(a: jax.Array, b: jax.Array, platform: str | None = None) -> jax.Array:
+    bm, bn, bk = BLOCK_TABLE[platform or _platform()]
+    while a.shape[0] % bm:
+        bm //= 2
+    while b.shape[1] % bn:
+        bn //= 2
+    while a.shape[1] % bk:
+        bk //= 2
+    return matmul_pallas(a, b, block_m=max(bm, 8), block_n=max(bn, 8),
+                         block_k=max(bk, 8),
+                         interpret=jax.default_backend() != "tpu")

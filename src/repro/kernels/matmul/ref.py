@@ -1,0 +1,11 @@
+"""Oracle for the blocked matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(M,K) @ (K,N) with f32 accumulation, result in a.dtype."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

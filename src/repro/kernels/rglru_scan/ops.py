@@ -1,0 +1,53 @@
+"""jit'd wrapper: Pallas RG-LRU scan with associative-scan backward."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.custom_vjp
+def rglru_scan(a, b):
+    return _fwd(a, b)
+
+
+def _fwd(a, b):
+    B, S, R = a.shape
+    br = 256
+    while R % br:
+        br //= 2
+    bs = 256
+    while S % bs:
+        bs //= 2
+    return rglru_scan_pallas(a, b, block_r=max(br, 8), block_s=max(bs, 1),
+                             interpret=not _on_tpu())
+
+
+def _fwd_vjp(a, b):
+    h = _fwd(a, b)
+    return h, (a, h)
+
+
+def _bwd_vjp(res, g):
+    """Reverse recurrence: dh_t = g_t + a_{t+1} dh_{t+1};
+    da_t = dh_t * h_{t-1}; db_t = dh_t."""
+    a, h = res
+    a_next = jnp.concatenate([a[:, 1:], jnp.zeros_like(a[:, :1])], axis=1)
+    # reverse-time linear recurrence -> reuse the forward scan on flipped data
+    gr = jnp.flip(g, axis=1)
+    ar = jnp.flip(a_next, axis=1)
+    dh = jnp.flip(rglru_scan_ref(ar, gr), axis=1)
+    h_prev = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    return dh * h_prev, dh
+
+
+rglru_scan.defvjp(_fwd_vjp, _bwd_vjp)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the RG-LRU blocked linear-recurrence kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array,
+                   h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1.
+
+    a, b: (B, S, R) f32;  h0: (B, R) initial state (zeros if None).
+    Sequential scan in f32 -- the ground truth the blocked kernel and the
+    associative-scan model path are both checked against.
+    """
+    B, S, R = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, R), a.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,118 @@
+"""Chunked SSD (Mamba-2 state-space duality) Pallas TPU kernel.
+
+The SSD insight: within a chunk the recurrence is a (masked, decayed)
+attention-like QUADRATIC form -- i.e. matmuls the MXU loves -- and across
+chunks only the (H, N, P) boundary state needs the serial recurrence. The
+CUDA reference pipelines chunk GEMMs through tensor cores; the TPU mapping:
+
+* grid = (B, H/block_h, S/chunk) with the CHUNK dim innermost; the running
+  state (block_h, N, P) sits in VMEM scratch and carries across chunk steps
+  (sequential grid on a TPU core);
+* per chunk per head: three MXU matmuls
+    scores   = C B^T                  (Q x N @ N x Q  -> Q x Q, head-shared)
+    y_intra  = (scores . L_h) @ x_h   (Q x Q @ Q x P)
+    y_inter  = (C . e^cum_h) @ S_h    (Q x N @ N x P)
+    S_h'     = g_h S_h + (wts_h . B)^T @ x_h   (N x Q @ Q x P)
+  with Q=chunk=256, N=128, P=64 all MXU-aligned;
+* the head loop inside a block is a static python unroll (block_h small);
+* decays are clipped at exp(-60) like the XLA model path.
+
+VMEM at defaults (chunk 256, block_h 8, N 128, P 64):
+  x tile 256x8x64x4 + L 256x256x8x4 + state 8x128x64x4  ~ 3.2 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, s_scr, *,
+                chunk: int, block_h: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, bh, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, bh)
+    A = a_ref[0]                              # (bh,)
+    Bm = b_ref[0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)         # (Q, N)
+
+    da = dt * A                               # (Q, bh), negative
+    cum = jnp.cumsum(da, axis=0)
+    seg = cum[-1, :]                          # (bh,)
+
+    scores = jax.lax.dot_general(             # (Q, Q), head-shared
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = ii >= jj
+
+    new_state = []
+    outs = []
+    for h in range(block_h):                  # static unroll, MXU per head
+        cum_h = cum[:, h]
+        # intra-chunk decay matrix L[i,j] = exp(cum_i - cum_j) dt_j (i>=j)
+        L = jnp.exp(jnp.clip(cum_h[:, None] - cum_h[None, :], -60.0, 0.0))
+        L = jnp.where(causal, L * dt[None, :, h], 0.0)
+        m1 = scores * L                                        # (Q, Q)
+        xh = x[:, h, :]                                        # (Q, P)
+        y = jax.lax.dot_general(m1, xh, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        # inter-chunk: incoming state contribution
+        cin = Cm * jnp.exp(jnp.clip(cum_h, -60.0, 0.0))[:, None]  # (Q, N)
+        y = y + jax.lax.dot_general(cin, s_scr[h],
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        outs.append(y)
+        # state update
+        wts = jnp.exp(jnp.clip(seg[h] - cum_h, -60.0, 0.0)) * dt[:, h]
+        bw = Bm * wts[:, None]                                 # (Q, N)
+        s_new = jax.lax.dot_general(bw, xh, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        g = jnp.exp(jnp.clip(seg[h], -60.0, 0.0))
+        new_state.append(g * s_scr[h] + s_new)
+
+    for h in range(block_h):
+        s_scr[h] = new_state[h]
+        o_ref[0, :, h, :] = outs[h].astype(o_ref.dtype)
+
+
+def ssd_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+               C: jax.Array, *, chunk: int = 256, block_h: int = 8,
+               interpret: bool = False) -> jax.Array:
+    """Chunked SSD. Shapes as ssd_ref; S % chunk == 0, H % block_h == 0."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    block_h = min(block_h, H)
+    assert S % chunk == 0 and H % block_h == 0, (S, H, chunk, block_h)
+    nc, nh = S // chunk, H // block_h
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, block_h=block_h)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_h, P),
+                         lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, block_h),
+                         lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, block_h), lambda bi, hi, ci: (0, hi)),
+            pl.BlockSpec((1, chunk, N), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_h, P),
+                               lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, S, H, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_h, N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.reshape(1, H), B, C)

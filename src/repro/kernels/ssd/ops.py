@@ -1,0 +1,53 @@
+"""jit'd wrapper for the SSD kernel (fwd Pallas, bwd via the chunked XLA
+formulation in models/ssm.py -- same algorithm, autodiff-friendly)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.models.ssm import _ssd_chunked
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.custom_vjp
+def ssd(x, dt, A, B, C):
+    """Chunked SSD; shapes as ssd_ref. Returns y (b,S,H,P) f32."""
+    return _fwd(x, dt, A, B, C)
+
+
+def _fwd(x, dt, A, B, C):
+    S, H = x.shape[1], x.shape[2]
+    chunk = 256
+    while S % chunk:
+        chunk //= 2
+    bh = 8
+    while H % bh:
+        bh //= 2
+    return ssd_pallas(x, dt, A, B, C, chunk=max(chunk, 1),
+                      block_h=max(bh, 1), interpret=not _on_tpu())
+
+
+def _fwd_vjp(x, dt, A, B, C):
+    return _fwd(x, dt, A, B, C), (x, dt, A, B, C)
+
+
+def _bwd_vjp(res, g):
+    x, dt, A, B, C = res
+    chunk = min(256, x.shape[1])
+
+    def xla_path(x_, dt_, A_, B_, C_):
+        y, _ = _ssd_chunked(x_.astype(jnp.float32), dt_.astype(jnp.float32),
+                            A_, B_.astype(jnp.float32),
+                            C_.astype(jnp.float32), chunk)
+        return y
+
+    _, vjp = jax.vjp(xla_path, x, dt, A, B, C)
+    return vjp(g)
+
+
+ssd.defvjp(_fwd_vjp, _bwd_vjp)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD (Mamba-2) kernel: naive sequential recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array) -> jax.Array:
+    """Sequential state-space recurrence (ground truth, O(S·H·N·P)).
+
+    x: (b,S,H,P); dt: (b,S,H) >0; A: (H,) <0; B,C: (b,S,N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t (x) x_t ;  y_t = C_t . h_t
+    Returns y: (b,S,H,P) f32.
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        a = jnp.exp(dtt * A)                                   # (b,H)
+        h = a[..., None, None] * h + jnp.einsum(
+            "bh,bn,bhp->bhnp", dtt, Bt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", Ct, h)
+        return h, y
+
+    h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+         Bf.swapaxes(0, 1), Cf.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,257 @@
+"""Roofline analysis over compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), at TPU v5e constants:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+  collective = wire_bytes_per_device / link_bw            (~50 GB/s/link ICI)
+
+``cost_analysis()`` on the partitioned module reports PER-DEVICE flops/bytes
+(verified empirically), so the terms above divide by one chip's peak.
+Collective bytes are parsed from the partitioned HLO text (per-device shard
+shapes): all-gather counts its result, reduce-scatter / all-to-all /
+collective-permute their operands, all-reduce its operands x2 (ring
+RS+AG decomposition).
+
+Scan correction: HloCostAnalysis counts a while-loop body ONCE regardless of
+trip count, so scanned layer stacks would be under-counted by ~n_layers.
+The dry-run therefore lowers per-stage *unit probes* and the reported totals
+are   full_module + sum_s (count_s - 1) * unit_probe_s   for flops, bytes
+and collective bytes alike.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# ---- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link (per-device wire budget proxy)
+HBM_PER_CHIP = 16 * 1024**3     # 16 GiB
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(typestr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+    cross_pod_bytes: int = 0     # bytes in collectives spanning a pod boundary
+
+    @property
+    def wire_bytes(self) -> int:
+        """Per-device bytes on the wire; all-reduce weighted x2 (ring)."""
+        total = 0
+        for op, b in self.bytes_by_op.items():
+            total += 2 * b if op == "all-reduce" else b
+        return total
+
+    def add(self, other: "CollectiveStats", scale: int = 1) -> None:
+        for op, b in other.bytes_by_op.items():
+            self.bytes_by_op[op] = self.bytes_by_op.get(op, 0) + b * scale
+        for op, c in other.count_by_op.items():
+            self.count_by_op[op] = self.count_by_op.get(op, 0) + c * scale
+        self.cross_pod_bytes += other.cross_pod_bytes * scale
+
+
+_GROUPS_RE = re.compile(r"replica_groups=(?:\{\{([0-9,]+)\}|\[(\d+),(\d+)\])")
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[0-9,]+\}(?:,\{[0-9,]+\})*)\}")
+
+
+def _group_size(line: str) -> int:
+    """Participants per replica group (1 if absent/unparseable)."""
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 1
+    if m.group(1) is not None:
+        return m.group(1).count(",") + 1
+    return int(m.group(3))          # iota form [n_groups, group_size]
+
+
+def _crosses_pod(line: str, n_devices: int, pod_size: int) -> bool:
+    """True iff any replica group spans a pod boundary (id // pod_size).
+
+    Handles both explicit ``{{0,256},...}`` and iota
+    ``[G,S]<=[dims]T(perm)`` forms (materialised exactly).
+    """
+    m = _IOTA_RE.search(line)
+    if m:
+        import numpy as np
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+        groups = ids.reshape(g, s)
+        pods = groups // pod_size
+        return bool((pods != pods[:, :1]).any())
+    m = _EXPLICIT_RE.search(line)
+    if m:
+        for grp in m.group(1)[1:-1].split("},{"):
+            ids = [int(x) for x in grp.split(",")]
+            if len({i // pod_size for i in ids}) > 1:
+                return True
+        return False
+    return False
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-device collective bytes from partitioned HLO text.
+
+    Byte accounting is RESULT-based (operand types are not always printed):
+      all-gather          result           (~bytes received per device)
+      all-reduce          result           (x2 ring factor in wire_bytes)
+      reduce-scatter      result x group   (operand = result x participants)
+      all-to-all          result           (send ~= recv)
+      collective-permute  result
+    metadata/op_name strings are stripped first (they can contain shape-like
+    text from source locations); ``-done`` lines don't match the pattern so
+    async pairs count once.
+    """
+    st = CollectiveStats()
+    mnum = re.search(r"num_partitions=(\d+)", hlo_text[:4000])
+    n_dev = int(mnum.group(1)) if mnum else 1
+    pod_size = 256 if n_dev > 256 else n_dev   # 2x16x16 production mesh
+    for line in hlo_text.splitlines():
+        stripped = line.split(", metadata=")[0]
+        m = _COLL_RE.search(stripped)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        shapes = [_shape_bytes(s) for s in re.findall(
+            r"[a-z0-9]+\[[0-9,]*\]", result_type)]
+        nbytes = max(shapes) if shapes else 0
+        if op == "reduce-scatter":
+            nbytes *= _group_size(stripped)
+        st.bytes_by_op[op] = st.bytes_by_op.get(op, 0) + nbytes
+        st.count_by_op[op] = st.count_by_op.get(op, 0) + 1
+        if n_dev > 256 and _crosses_pod(stripped, n_dev, pod_size):
+            st.cross_pod_bytes += 2 * nbytes if op == "all-reduce" else nbytes
+    return st
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: CollectiveStats = field(default_factory=CollectiveStats)
+
+    def add(self, other: "Cost", scale: int = 1) -> None:
+        self.flops += other.flops * scale
+        self.bytes_accessed += other.bytes_accessed * scale
+        self.collectives.add(other.collectives, scale)
+
+
+def cost_of(compiled, hlo_text: str | None = None) -> Cost:
+    ca = compiled.cost_analysis() or {}
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    return Cost(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        collectives=parse_collectives(text),
+    )
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops_global: float
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO flops aggregated over devices)."""
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """(useful work at peak) / (time the dominant term implies).
+
+        == MFU if compute-bound with zero waste."""
+        ideal = self.model_flops_global / (self.n_devices * PEAK_FLOPS_BF16)
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "model_flops_global": self.model_flops_global,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "n_devices": self.n_devices,
+        }
+
+
+def roofline(cost: Cost, model_flops_global: float, n_devices: int) -> Roofline:
+    return Roofline(
+        compute_s=cost.flops / PEAK_FLOPS_BF16,
+        memory_s=cost.bytes_accessed / HBM_BW,
+        collective_s=cost.collectives.wire_bytes / ICI_BW,
+        flops_per_device=cost.flops,
+        bytes_per_device=cost.bytes_accessed,
+        wire_bytes_per_device=cost.collectives.wire_bytes,
+        model_flops_global=model_flops_global,
+        n_devices=n_devices,
+    )
+
+
+def model_flops(cfg, cell, tokens_override: float | None = None) -> float:
+    """6·N·D (train) / 2·N·D (prefill & decode); N = flop-participating,
+    *active* params for MoE."""
+    n_active = cfg.param_count(active_only=True)
+    if not cfg.tie_embeddings:
+        n_active -= cfg.vocab_size * cfg.d_model   # lookup table does no flops
+    tokens = tokens_override
+    if tokens is None:
+        tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,105 @@
+"""Training driver: srun-shaped entry point.
+
+  PYTHONPATH=src python -m repro.launch.train --image <tag-or-Imagefile> \
+      [--platform local|pod|multipod] --steps 100
+
+The paper's `srun shifter --image=... ./demo` analog: one image, any
+platform, the host decides where it runs. Fault tolerance is on by default:
+deterministic data, periodic async checkpoints into the container overlay,
+resume from the latest checkpoint (possibly on a DIFFERENT platform --
+elastic restart), straggler monitoring with checkpoint-on-trip.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.elastic import reshard_restore
+from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint.straggler import StragglerMonitor
+from repro.core.runtime import Runtime
+from repro.data.pipeline import DataConfig, SyntheticLM
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--image", required=True,
+                    help="registry tag/digest, or a path to an Imagefile")
+    ap.add_argument("--platform", default=None)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--root", default=".stevedore")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    rt = Runtime(args.root)
+    if Path(args.image).exists():
+        image = rt.build(Path(args.image).read_text())
+    else:
+        image = rt.pull(args.image)
+    c = rt.run(image, platform=args.platform)
+    c.ensure_overlay()
+    cell = c.cell
+    print(f"[train] image={image.short_digest} arch={c.arch.name} "
+          f"platform={c.platform} cell={cell.name} abi={c.abi.describe()}")
+
+    data = SyntheticLM(DataConfig(
+        vocab_size=c.arch.vocab_size, seq_len=cell.seq_len,
+        global_batch=cell.global_batch, seed=args.seed,
+        frontend_len=c.arch.frontend_len, d_model=c.arch.d_model))
+
+    store = CheckpointStore(c.overlay / "ckpt")
+    start_step = 0
+    if args.resume and store.latest_step() is not None:
+        t = {"params": c.abstract_params(), "opt": c.abstract_opt_state()}
+        sh = {"params": c.param_shardings(), "opt": c.opt_state_shardings()}
+        restored = reshard_restore(store, t, sh)
+        params, opt = restored["params"], restored["opt"]
+        start_step = int(jax.device_get(opt["step"]))
+        print(f"[train] resumed from step {start_step} "
+              f"(elastic: mesh={c.platform})")
+    else:
+        params = c.init_params(args.seed)
+        opt = c.init_opt_state(params)
+
+    step_fn = jax.jit(c.train_step_fn(), donate_argnums=(0, 1))
+    mon = StragglerMonitor()
+    last_loss = float("nan")
+    for i in range(start_step, start_step + args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        mon.start()
+        params, opt, metrics = step_fn(params, opt, batch)
+        jax.block_until_ready(metrics["loss"])
+        timing = mon.stop()
+        last_loss = float(metrics["loss"])
+        c.log_metrics(i + 1, {**metrics, "step_seconds":
+                              timing["step_seconds"],
+                              "straggler_flag": timing["flagged"]})
+        if timing["tripped"]:
+            print(f"[train] straggler trip at step {i+1}: checkpointing for "
+                  "drain/replace")
+            store.save(i + 1, {"params": params, "opt": opt}, blocking=True)
+        elif (i + 1) % args.ckpt_every == 0:
+            store.save(i + 1, {"params": params, "opt": opt})
+        if (i + 1) % 10 == 0 or i == start_step:
+            print(f"[train] step {i+1} loss={last_loss:.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"t={timing['step_seconds']*1e3:.0f}ms")
+    store.wait()
+    store.save(start_step + args.steps, {"params": params, "opt": opt},
+               blocking=True)
+    print(f"[train] done at step {start_step + args.steps}; "
+          f"overlay={c.overlay}")
+    return {"final_loss": last_loss, "overlay": str(c.overlay),
+            "steps": start_step + args.steps}
+
+
+if __name__ == "__main__":
+    main()

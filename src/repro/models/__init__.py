@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig, ShapeCell, SHAPE_CELLS
+from repro.models.transformer import Model, build_stages
+
+__all__ = ["ModelConfig", "ShapeCell", "SHAPE_CELLS", "Model", "build_stages"]

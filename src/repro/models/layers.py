@@ -1,0 +1,136 @@
+"""Shared building blocks: norms, RoPE, MLP variants, embeddings."""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_defs(cfg: ModelConfig) -> dict:
+    d = {"scale": ParamDef((cfg.d_model,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamDef((cfg.d_model,), ("embed",), "zeros")
+    return d
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+        return (x32 * p["scale"].astype(jnp.float32)).astype(dt)
+    if kind == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        x32 = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        return (x32 * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+    raise ValueError(kind)
+
+
+def rms_gated(x: jax.Array, z: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Mamba-2 gated RMSNorm: rmsnorm(x * silu(z)) * scale."""
+    dt = x.dtype
+    y = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (with partial-rotary support: stablelm 25%, nemotron 50%)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd_rot: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd_rot, 2, dtype=jnp.float32) / hd_rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, pct: float = 1.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    hd_rot = int(hd * pct)
+    hd_rot -= hd_rot % 2
+    if hd_rot == 0:
+        return x
+    xr, xp = x[..., :hd_rot], x[..., hd_rot:]
+    freqs = rope_freqs(hd_rot, theta)                       # (hd_rot/2,)
+    ang = positions[..., None, None].astype(jnp.float32) * freqs  # (..., S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., ::2].astype(jnp.float32), xr[..., 1::2].astype(jnp.float32)
+    ro = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    ro = ro.reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([ro, xp], axis=-1) if hd_rot < hd else ro
+
+
+# ---------------------------------------------------------------------------
+# MLPs: swiglu | geglu | gelu | relu2
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wg": ParamDef((D, F), ("embed", "mlp")),
+            "wu": ParamDef((D, F), ("embed", "mlp")),
+            "wd": ParamDef((F, D), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamDef((D, F), ("embed", "mlp")),
+        "wd": ParamDef((F, D), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    dt = x.dtype
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = act(x @ p["wg"].astype(dt)) * (x @ p["wu"].astype(dt))
+        return h @ p["wd"].astype(dt)
+    h = x @ p["wi"].astype(dt)
+    if kind == "gelu":
+        h = jax.nn.gelu(h)
+    elif kind == "relu2":                 # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(kind)
+    return h @ p["wd"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head (with physical vocab padding, Megatron-style)
+# ---------------------------------------------------------------------------
+
+VOCAB_PAD_MULTIPLE = 128  # covers TP<=128 and XLA lane alignment
+
+
+def padded_vocab(v: int) -> int:
+    return ((v + VOCAB_PAD_MULTIPLE - 1) // VOCAB_PAD_MULTIPLE) * VOCAB_PAD_MULTIPLE
+
+
+def embed_defs(cfg: ModelConfig) -> dict:
+    vp = padded_vocab(cfg.vocab_size)
+    d = {"tokens": ParamDef((vp, cfg.d_model), ("vocab", "embed"), "small_normal")}
+    if not cfg.tie_embeddings:
+        d["head"] = ParamDef((cfg.d_model, vp), ("embed", "vocab"))
+    return d
+
+
+def embed_tokens(p: dict, tokens: jax.Array, cfg: ModelConfig, dtype) -> jax.Array:
+    x = p["tokens"].astype(dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def lm_logits(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ p["tokens"].astype(x.dtype).T
+    return x @ p["head"].astype(x.dtype)

@@ -1,0 +1,93 @@
+"""Parameter definition trees: one source of truth for shape/init/sharding.
+
+Every module describes its parameters as a tree of ``ParamDef`` (shape +
+logical axes + init law). From that single tree we derive:
+  * materialised params        (``materialize``  -- real training)
+  * abstract params            (``abstract``     -- dry-run ShapeDtypeStructs)
+  * NamedShardings             (via dist.sharding rules)
+  * stacked per-layer params   (``stack_defs``   -- scan-over-layers)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ShardingRules, logical_sharding
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "fan_in"      # fan_in | normal | zeros | ones | small_normal
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack_defs(tree, n: int):
+    """Prepend a scanned 'layers' axis of size n to every ParamDef."""
+    return jax.tree.map(
+        lambda d: replace(d, shape=(n, *d.shape), logical=("layers", *d.logical)),
+        tree,
+        is_leaf=is_def,
+    )
+
+
+def _init_one(d: ParamDef, key, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        return (d.scale * jax.random.normal(key, d.shape)).astype(dtype)
+    if d.init == "small_normal":
+        return (0.02 * d.scale * jax.random.normal(key, d.shape)).astype(dtype)
+    if d.init == "fan_in":
+        # truncated-normal with 1/sqrt(fan_in); fan_in = product of all dims
+        # except the last (works for (in, out) and (in, heads, hd) layouts).
+        fan_in = max(1, math.prod(d.shape[:-1]) if len(d.shape) > 1 else d.shape[0])
+        # for stacked (layers, ...) defs, drop the scan axis from fan-in
+        std = d.scale / math.sqrt(fan_in)
+        return (std * jax.random.truncated_normal(key, -2.0, 2.0, d.shape)).astype(dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def materialize(tree, key, dtype=jnp.float32):
+    """Instantiate a ParamDef tree. Keys are derived per-path (fold_in of the
+    flattened leaf index) so adding parameters never reshuffles others."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_def)
+    out = [
+        _init_one(d, jax.random.fold_in(key, i), dtype) for i, d in enumerate(leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(tree, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), tree, is_leaf=is_def
+    )
+
+
+def shardings(tree, mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda d: logical_sharding(d.logical, mesh, rules), tree, is_leaf=is_def
+    )
+
+
+def logical_specs(tree):
+    return jax.tree.map(lambda d: d.logical, tree, is_leaf=is_def)
+
+
+def count_params(tree) -> int:
+    return sum(math.prod(d.shape) for d in jax.tree.leaves(tree, is_leaf=is_def))

@@ -1,0 +1,233 @@
+"""Mamba-2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm (the paper's "quadratic-within-chunk, linear-across-
+chunk" decomposition -- this is what makes SSM training matmul-dominated and
+MXU-friendly on TPU):
+
+  per chunk of length Q:
+    L[i,j]   = exp(cum_a_i - cum_a_j) * dt_j        (i >= j, intra-chunk decay)
+    Y_intra  = ((C B^T) .* L) X                      -- quadratic in Q only
+    S_chunk  = sum_j exp(cum_a_last - cum_a_j) dt_j B_j (x) X_j   (H,N,P)
+  across chunks:
+    S_k      = exp(sum_a_k) S_{k-1} + S_chunk_k      -- associative scan
+    Y_inter  = (C_i exp(cum_a_i)) . S_{k-1}
+  Y = Y_intra + Y_inter + D*X, then gated RMSNorm and out-projection.
+
+Projections are kept *separate* (wz/wx/wB/wC/wdt rather than one fused
+in_proj) so each piece takes its natural sharding: d_inner -> model TP,
+B/C state dims replicated, dt heads -> model. Same FLOPs, cleaner SPMD
+(noted in DESIGN.md as a layout deviation from the reference CUDA code).
+
+Decode is the O(1) recurrence: h = exp(dt*A) h + dt * B (x) x ; y = C.h + D x.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_gated
+from repro.models.params import ParamDef
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    D, di, ds, nh, K = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                        cfg.ssm_heads, cfg.conv_kernel)
+    conv_ch = di + 2 * ds      # conv runs over (x, B, C) channels
+    return {
+        "wz": ParamDef((D, di), ("embed", "rnn")),
+        "wx": ParamDef((D, di), ("embed", "rnn")),
+        "wB": ParamDef((D, ds), ("embed", None)),
+        "wC": ParamDef((D, ds), ("embed", None)),
+        "wdt": ParamDef((D, nh), ("embed", "heads")),
+        "conv_w": ParamDef((conv_ch, K), ("rnn", None), "normal", 0.1),
+        "conv_b": ParamDef((conv_ch,), ("rnn",), "zeros"),
+        "A_log": ParamDef((nh,), ("heads",), "normal", 0.5),
+        "D": ParamDef((nh,), ("heads",), "ones"),
+        "dt_bias": ParamDef((nh,), ("heads",), "zeros"),
+        "gate_norm": ParamDef((di,), ("rnn",), "ones"),
+        "out": ParamDef((di, D), ("rnn", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (B,S,Ch), w: (Ch,K)."""
+    K = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, :, None].transpose(1, 2, 0),           # (K, 1, Ch) KIO
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD scan. x: (b,S,H,P); dt: (b,S,H); A: (H,)<0; B,C: (b,S,N).
+
+    Returns y: (b,S,H,P). Group count fixed at 1 (per the 2.7b config)."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    xq = x.reshape(b, nc, chunk, H, P)
+    dtq = dt.reshape(b, nc, chunk, H)
+    Bq = B.reshape(b, nc, chunk, N)
+    Cq = C.reshape(b, nc, chunk, N)
+
+    da = dtq * A                                           # (b,nc,Q,H) negative
+    cum = jnp.cumsum(da, axis=2)                           # inclusive cumsum
+    seg_total = cum[:, :, -1]                              # (b,nc,H)
+
+    # ---- intra-chunk (quadratic in chunk length; matmul-dominated) ---------
+    scores = jnp.einsum("bcin,bcjn->bcij", Cq, Bq)         # (b,nc,Q,Q)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])
+    # decay L[i,j] = exp(cum_i - cum_j) * dt_j   per head
+    L = jnp.exp(
+        jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :], -60.0, 0.0)
+    ) * dtq[:, :, None, :, :]                              # (b,nc,Q,Q,H)
+    L = jnp.where(causal[None, None, :, :, None], L, 0.0)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, xq)
+
+    # ---- chunk boundary states ---------------------------------------------
+    wts = jnp.exp(jnp.clip(seg_total[:, :, None, :] - cum, -60.0, 0.0)) * dtq
+    # S_chunk[b,c,h,n,p] = sum_j wts[...,j,h] * B[...,j,n] * x[...,j,h,p]
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", wts, Bq, xq)
+
+    # ---- inter-chunk recurrence: S_k = g_k * S_{k-1} + S_chunk_k ------------
+    g = jnp.exp(jnp.clip(seg_total, -60.0, 0.0))           # (b,nc,H)
+
+    def combine(a, b_):
+        ga, sa = a
+        gb, sb = b_
+        return ga * gb, sb + gb[..., None, None] * sa
+
+    gs, ss = jax.lax.associative_scan(combine, (g, s_chunk), axis=1)
+    # state *entering* chunk c = scanned state of chunk c-1
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(ss[:, :1]), ss[:, :-1]], axis=1
+    )                                                      # (b,nc,H,N,P)
+
+    # ---- inter-chunk contribution -------------------------------------------
+    cin = Cq[:, :, :, None, :] * jnp.exp(
+        jnp.clip(cum, -60.0, 0.0)
+    )[..., None]                                           # (b,nc,Q,H,N)
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", cin, s_prev)
+
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y, ss[:, -1]                                    # (.., final state)
+
+
+def ssm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                return_cache: bool = False):
+    """Training/prefill forward. x: (B,S,D) -> (B,S,D) [, decode cache].
+
+    Padded tail steps (to a chunk multiple) only influence later positions,
+    so real outputs are unaffected; BUT the final *state* must be taken at
+    the true position S, so when a cache is requested we avoid padding by
+    asserting chunk-divisibility (all assigned cells are powers of two)."""
+    Bsz, S, D = x.shape
+    di, ds, nh, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    dt_ = x.dtype
+
+    z = x @ p["wz"].astype(dt_)
+    xi = x @ p["wx"].astype(dt_)
+    Bm = x @ p["wB"].astype(dt_)
+    Cm = x @ p["wC"].astype(dt_)
+    dt = x @ p["wdt"].astype(dt_)
+
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_))
+    xi, Bm, Cm = jnp.split(conv_out, [di, di + ds], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,)
+
+    xh = xi.reshape(Bsz, S, nh, P)
+    chunk = min(cfg.ssm_chunk, S)
+    pad = (-S) % chunk
+    if pad and return_cache:
+        raise ValueError(f"prefill length {S} must be divisible by ssm_chunk "
+                         f"{chunk} when a decode cache is requested")
+    if pad:
+        # zero-pad the tail to a chunk multiple; padded steps only influence
+        # later (sliced-off) positions, so real outputs are unaffected.
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, final_state = _ssd_chunked(xh.astype(jnp.float32), dt, A,
+                                  Bm.astype(jnp.float32),
+                                  Cm.astype(jnp.float32), chunk)
+    if pad:
+        y = y[:, :S]
+        xh = xh[:, :S]
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, di).astype(dt_)
+
+    y = rms_gated(y, z, p["gate_norm"])
+    out = y @ p["out"].astype(dt_)
+    if return_cache:
+        cache = {"conv": conv_in[:, -(cfg.conv_kernel - 1):],
+                 "state": final_state}
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) state update)
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(n_layers: int, batch: int, cfg: ModelConfig, dtype) -> dict:
+    di, ds, nh, P, K = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                        cfg.ssm_headdim, cfg.conv_kernel)
+    return {
+        "conv": jnp.zeros((n_layers, batch, K - 1, di + 2 * ds), dtype),
+        "state": jnp.zeros((n_layers, batch, nh, ds, P), jnp.float32),
+    }
+
+
+def ssm_cache_specs():
+    return {
+        "conv": ("layers", "batch", None, "rnn"),
+        "state": ("layers", "batch", "heads", None, None),
+    }
+
+
+def ssm_decode(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """x: (B,1,D); cache: {conv (B,K-1,Ch), state (B,H,N,P)}."""
+    Bsz = x.shape[0]
+    di, ds, nh, P, K = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                        cfg.ssm_headdim, cfg.conv_kernel)
+    dt_ = x.dtype
+    xt = x[:, 0]                                           # (B,D)
+
+    z = xt @ p["wz"].astype(dt_)
+    xi = xt @ p["wx"].astype(dt_)
+    Bm = xt @ p["wB"].astype(dt_)
+    Cm = xt @ p["wC"].astype(dt_)
+    dt = xt @ p["wdt"].astype(dt_)
+
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)       # (B,Ch)
+    win = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)  # (B,K,Ch)
+    conv_out = jnp.einsum("bkc,ck->bc", win, p["conv_w"].astype(dt_))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(dt_))
+    xi, Bm, Cm = jnp.split(conv_out, [di, di + ds], axis=-1)
+    new_conv = win[:, 1:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                    # (B,H)
+
+    xh = xi.reshape(Bsz, nh, P).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bn,bhp->bhnp", dt, Bm.astype(jnp.float32), xh)
+    state = a[..., None, None] * cache["state"] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), state)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(Bsz, di).astype(dt_)
+
+    y = rms_gated(y, z, p["gate_norm"])
+    out = (y @ p["out"].astype(dt_))[:, None]              # (B,1,D)
+    return out, {"conv": new_conv, "state": state}

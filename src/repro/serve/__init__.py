@@ -1,0 +1,3 @@
+from repro.serve.serve_step import ServeStepBuilder, greedy_sample
+
+__all__ = ["ServeStepBuilder", "greedy_sample"]

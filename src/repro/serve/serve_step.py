@@ -1,0 +1,70 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``prefill``: (params, tokens[, frontend_embeds]) -> (last_logits, cache)
+``decode`` : (params, cache, tokens (B,1), idx)  -> (logits, new_cache)
+
+Sampling masks physically-padded vocab columns (models pad the vocab to a
+lane/TP multiple -- see models/layers.padded_vocab) so padded ids can never
+be emitted.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.dist.sharding import ShardingRules
+from repro.models.transformer import Model
+
+
+def greedy_sample(logits: jax.Array, vocab_size: int) -> jax.Array:
+    vp = logits.shape[-1]
+    if vp != vocab_size:
+        col = jnp.arange(vp) >= vocab_size
+        logits = jnp.where(col, -jnp.inf, logits)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@dataclass
+class ServeStepBuilder:
+    model: Model
+    mesh: Mesh
+    rules: ShardingRules
+
+    def build_prefill(self, cache_len: int) -> Callable:
+        def prefill(params, tokens, frontend_embeds=None):
+            logits, cache, _ = self.model.forward(
+                params, tokens, frontend_embeds=frontend_embeds,
+                collect_cache=True, cache_len=cache_len)
+            return logits[:, -1], cache
+
+        return prefill
+
+    def build_decode(self) -> Callable:
+        def decode(params, cache, tokens, idx):
+            logits, new_cache = self.model.decode_step(params, cache, tokens, idx)
+            return logits[:, -1], new_cache
+
+        return decode
+
+    def build_generate_loop(self, n_steps: int) -> Callable:
+        """Greedy autoregressive loop (used by examples + integration tests)."""
+        decode = self.build_decode()
+        vocab = self.model.cfg.vocab_size
+
+        def generate(params, cache, first_token, start_idx):
+            def body(carry, _):
+                cache, tok, idx = carry
+                logits, cache = decode(params, cache, tok, idx)
+                nxt = greedy_sample(logits, vocab)[:, None]
+                return (cache, nxt, idx + 1), nxt[:, 0]
+
+            (cache, _, _), toks = jax.lax.scan(
+                body, (cache, first_token, start_idx), None, length=n_steps)
+            return jnp.moveaxis(toks, 0, 1), cache   # (B, n_steps)
+
+        return generate

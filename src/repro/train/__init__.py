@@ -1,0 +1,5 @@
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update, lr_at
+from repro.train.train_step import TrainStepBuilder, cross_entropy
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_at",
+           "TrainStepBuilder", "cross_entropy"]

@@ -1,0 +1,99 @@
+"""PowerSGD gradient compression with error feedback [Vogels et al. 2019,
+arXiv:1905.13727] -- the beyond-paper entry in the collective ABI.
+
+Rank-r compression of each >=2D gradient: G (m,n) ~= P Q^T with P (m,r),
+Q (n,r). One power-iteration step per training step:
+
+    P   = G @ Q_prev          ; pmean(P)  ; P = orth(P)
+    Q   = G^T @ P             ; pmean(Q)
+    Ghat= P @ Q^T             ; error e += G - Ghat   (fed back next step)
+
+Wire per tensor: r(m+n) floats instead of m*n -- e.g. a (8192, 22016) MLP
+gradient at rank 16 moves 0.48 MB instead of 721 MB (1500x). The error
+buffer makes the scheme unbiased over time (residual is retransmitted),
+which is why it trains: lossy-but-compensated, the same contract as the
+bf16 wire option, one more notch down the fidelity/bandwidth curve.
+
+This composes with the paper's ABI story: the image's collectives layer
+says ``COLLECTIVES host mode=explicit compression=powersgd rank=16`` and
+neither the model nor the optimizer changes.
+
+Small tensors (1D norms/biases, or m*n <= 4*r*(m+n)) sync uncompressed --
+compression would cost more than it saves.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _as_matrix(g):
+    """Collapse a >=2D tensor to (leading, rest)."""
+    if g.ndim == 2:
+        return g
+    return g.reshape(g.shape[0], -1)
+
+
+def _compressible(g, rank: int) -> bool:
+    if g.ndim < 2:
+        return False
+    m = g.shape[0]
+    n = int(g.size // m)
+    return m >= rank and n >= rank and g.size > 4 * rank * (m + n)
+
+
+def powersgd_init(params, rank: int, key=None):
+    """Per-leaf state: Q (n,r) random orthonormal-ish, error f32 buffer."""
+    key = key if key is not None else jax.random.key(17)
+    leaves, treedef = jax.tree.flatten(params)
+    qs, errs = [], []
+    for i, p in enumerate(leaves):
+        if _compressible(p, rank):
+            g2 = _as_matrix(p)
+            q = jax.random.normal(jax.random.fold_in(key, i),
+                                  (g2.shape[1], rank), jnp.float32)
+            q, _ = jnp.linalg.qr(q)
+            qs.append(q)
+            errs.append(jnp.zeros(p.shape, jnp.float32))
+        else:
+            qs.append(None)
+            errs.append(None)
+    none_leaf = lambda t: jax.tree.unflatten(treedef, t)
+    return {"q": none_leaf(qs), "err": none_leaf(errs), "rank": rank}
+
+
+def _is_state_leaf(x):
+    return x is None or isinstance(x, jax.Array) or hasattr(x, "shape")
+
+
+def powersgd_sync(grads, state, batch_axes, rank: int):
+    """Cross-replica mean of grads with rank-r compression + error feedback.
+
+    Called inside shard_map (manual over ``batch_axes``). Returns
+    (synced_grads, new_state)."""
+    g_leaves, treedef = jax.tree.flatten(grads)
+    q_leaves = treedef.flatten_up_to(state["q"])
+    e_leaves = treedef.flatten_up_to(state["err"])
+
+    out_g, out_q, out_e = [], [], []
+    for g, q, e in zip(g_leaves, q_leaves, e_leaves):
+        if q is None:
+            out_g.append(jax.lax.pmean(g.astype(jnp.float32),
+                                       tuple(batch_axes)).astype(g.dtype))
+            out_q.append(None)
+            out_e.append(None)
+            continue
+        g32 = g.astype(jnp.float32) + e
+        g2 = _as_matrix(g32)
+        p = g2 @ q                                          # (m, r)
+        p = jax.lax.pmean(p, tuple(batch_axes))             # wire: m*r
+        p, _ = jnp.linalg.qr(p)                             # orthonormalize
+        qn = g2.T @ p                                       # (n, r)
+        qn = jax.lax.pmean(qn, tuple(batch_axes))           # wire: n*r
+        ghat = (p @ qn.T).reshape(g.shape)
+        out_g.append(ghat.astype(g.dtype))
+        out_q.append(qn)                                    # warm-start next step
+        out_e.append(g32 - ghat)                            # error feedback
+    unf = lambda t: jax.tree.unflatten(treedef, t)
+    return unf(out_g), {"q": unf(out_q), "err": unf(out_e), "rank": rank}

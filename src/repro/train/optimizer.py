@@ -1,0 +1,98 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule (from scratch;
+no optax in this environment).
+
+State = {m, v} f32 trees shaped like params, plus a scalar step. The ZeRO-1
+trick lives entirely in *sharding*: Container shards m/v (and the update
+computation) over the batch axes via the opt-state sharding rules, which
+turns the gradient all-reduce into reduce-scatter + all-gather (see
+core/abi.py).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(math.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def adamw_init(params, with_master: bool = False):
+    """with_master: keep an f32 master copy in the optimizer (params may
+    then live in bf16 for compute/FSDP-gather traffic -- standard mixed
+    precision; the master shards like m/v, i.e. ZeRO-1-able)."""
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    st = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if with_master:
+        st["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return st
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics). If the state carries an f32
+    ``master`` tree, updates apply to it and params are its cast."""
+    step = state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1)
+    c2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, m, v, base):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh, vh = m / c1, v / c2
+        b32 = base.astype(jnp.float32)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * b32
+        new_base = b32 - lr * delta
+        return new_base.astype(p.dtype), m, v, new_base
+
+    masters = state.get("master")
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_b = jax.tree.leaves(masters) if masters is not None else flat_p
+    out = [upd(p, g, m, v, b) for p, g, m, v, b in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_b)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    if masters is not None:
+        new_state["master"] = jax.tree.unflatten(tdef, [o[3] for o in out])
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,111 @@
+"""Roofline analysis parsers: collective byte accounting, cross-pod
+classification, model-flops accounting."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.launch.analysis import (
+    CollectiveStats, Cost, _crosses_pod, _shape_bytes, model_flops,
+    parse_collectives, roofline, PEAK_FLOPS_BF16,
+)
+from repro.models.config import get_shape_cell
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert _shape_bytes("bf16[2,3,4]") == 24 * 2
+    assert _shape_bytes("f32[]") == 4
+    assert _shape_bytes("(f32[8], bf16[8])") == 32 + 16
+    assert _shape_bytes("token[]") == 0
+
+
+HLO = """\
+HloModule jit_step, num_partitions=512
+  %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups={{0,1},{2,3}}, to_apply=%add
+  %ag = bf16[64,128]{1,0} all-gather(%y), replica_groups=[32,16]<=[512], dimensions={0}
+  %rs = f32[4,128]{1,0} reduce-scatter(%z), replica_groups={{0,256}}, dimensions={0}, to_apply=%add
+  %cp = bf16[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ard = f32[16,128]{1,0} all-reduce-done(%h)
+"""
+
+
+def test_parse_collectives_bytes():
+    st = parse_collectives(HLO)
+    assert st.count_by_op == {"all-reduce": 1, "all-gather": 1,
+                              "reduce-scatter": 1, "collective-permute": 1}
+    assert st.bytes_by_op["all-reduce"] == 16 * 128 * 4
+    assert st.bytes_by_op["all-gather"] == 64 * 128 * 2
+    # reduce-scatter: result x group size (2)
+    assert st.bytes_by_op["reduce-scatter"] == 4 * 128 * 4 * 2
+    # wire: AR counted twice (ring)
+    assert st.wire_bytes == (2 * 16 * 128 * 4 + 64 * 128 * 2
+                             + 4 * 128 * 4 * 2 + 8 * 8 * 2)
+
+
+def test_cross_pod_classification():
+    # explicit groups within pod 0
+    assert not _crosses_pod("replica_groups={{0,1},{2,3}}", 512, 256)
+    # explicit group spanning pods
+    assert _crosses_pod("replica_groups={{0,256}}", 512, 256)
+    # iota: 32 groups of 16 consecutive ids -> intra-pod
+    assert not _crosses_pod("replica_groups=[32,16]<=[512]", 512, 256)
+    # iota with transpose: groups stride across both pods
+    assert _crosses_pod("replica_groups=[16,32]<=[32,16]T(1,0)", 512, 256)
+
+
+def test_parse_collectives_cross_pod():
+    st = parse_collectives(HLO)
+    # only the reduce-scatter {{0,256}} crosses; counted once (not an AR)
+    assert st.cross_pod_bytes == 4 * 128 * 4 * 2
+
+
+def test_metadata_shapes_ignored():
+    line = ('  %ar = f32[8]{0} all-reduce(%x), replica_groups={{0,1}}, '
+            'metadata={op_name="jit(f)/reshape[f32[9999,9999]]"}\n')
+    st = parse_collectives("num_partitions=2\n" + line)
+    assert st.bytes_by_op["all-reduce"] == 32
+
+
+def test_collective_stats_add_scales():
+    a = CollectiveStats(bytes_by_op={"all-reduce": 10}, count_by_op={"all-reduce": 1},
+                        cross_pod_bytes=4)
+    b = CollectiveStats(bytes_by_op={"all-reduce": 3, "all-gather": 7},
+                        count_by_op={"all-reduce": 1, "all-gather": 2},
+                        cross_pod_bytes=1)
+    a.add(b, scale=5)
+    assert a.bytes_by_op == {"all-reduce": 25, "all-gather": 35}
+    assert a.count_by_op == {"all-reduce": 6, "all-gather": 10}
+    assert a.cross_pod_bytes == 9
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("llama3.2-3b")
+    train = model_flops(cfg, get_shape_cell("train_4k"))
+    decode = model_flops(cfg, get_shape_cell("decode_32k"))
+    # train: 6*N*(256*4096) tokens; decode: 2*N*128 tokens
+    assert train / decode == pytest.approx(
+        (6 * 256 * 4096) / (2 * 128), rel=1e-6)
+
+
+def test_model_flops_moe_uses_active_params():
+    cfg = get_config("moonshot-v1-16b-a3b")
+    cell = get_shape_cell("train_4k")
+    full_n = cfg.param_count(active_only=False)
+    act_n = cfg.param_count(active_only=True)
+    assert act_n < 0.4 * full_n              # 6 of 64 experts active
+    mf = model_flops(cfg, cell)
+    assert mf < 6 * full_n * cell.global_batch * cell.seq_len
+
+
+def test_roofline_dominant_and_fraction():
+    cost = Cost(flops=197e12, bytes_accessed=819e9 * 2,
+                collectives=CollectiveStats(bytes_by_op={"all-reduce": 0}))
+    rl = roofline(cost, model_flops_global=197e12 * 256, n_devices=256)
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.memory_s == pytest.approx(2.0)
+    assert rl.dominant == "memory"
+    # ideal time = 1.0s; bound = 2.0s -> fraction 0.5
+    assert rl.roofline_fraction == pytest.approx(0.5)
+    assert rl.useful_flops_fraction == pytest.approx(1.0)

@@ -1,0 +1,125 @@
+"""Checkpoint store: CAS dedupe, atomic publish, async save, gc, restore,
+elastic re-shard; straggler monitor behaviour."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint.elastic import reshard_restore
+from repro.checkpoint.straggler import StragglerMonitor
+
+
+def tree(seed=0, scale=1.0):
+    k = jax.random.key(seed)
+    return {
+        "w": scale * jax.random.normal(k, (32, 16)),
+        "nested": {"b": jnp.arange(8, dtype=jnp.float32),
+                   "step": jnp.int32(3)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    store = CheckpointStore(tmp_path)
+    t = tree()
+    store.save(10, t, blocking=True)
+    out = store.restore(t, 10)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_steps(tmp_path):
+    store = CheckpointStore(tmp_path)
+    for s in (1, 5, 3):
+        store.save(s, tree(s), blocking=True)
+    assert store.steps() == [1, 3, 5]
+    assert store.latest_step() == 3          # LATEST points at last written
+
+
+def test_blob_dedupe_across_checkpoints(tmp_path):
+    """Unchanged tensors are stored once (layered-FS discipline)."""
+    store = CheckpointStore(tmp_path)
+    t = tree()
+    store.save(1, t, blocking=True)
+    s1 = dict(store.last_stats)
+    t2 = {**t, "w": t["w"] + 1}             # only w changes
+    store.save(2, t2, blocking=True)
+    s2 = dict(store.last_stats)
+    assert s1["new_blobs"] == 3
+    assert s2["new_blobs"] == 1
+    assert s2["reused_blobs"] == 2
+
+
+def test_async_save_then_wait(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(7, tree(), blocking=False)
+    store.wait()
+    assert store.latest_step() == 7
+
+
+def test_gc_keeps_live_blobs(tmp_path):
+    store = CheckpointStore(tmp_path)
+    for s in range(5):
+        store.save(s, tree(s), blocking=True)
+    removed = store.gc(keep_last=2)
+    assert store.steps() == [3, 4]
+    assert removed > 0
+    # survivors still restore
+    out = store.restore(tree(4), 4)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree(4)["w"]))
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(1, tree(), blocking=True)
+    bad = {**tree(), "w": jnp.zeros((4, 4))}
+    with pytest.raises(ValueError, match="shape"):
+        store.restore(bad, 1)
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Restore onto a (trivially) different mesh layout: the store is
+    layout-agnostic, placement comes from the target shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    store = CheckpointStore(tmp_path)
+    t = tree()
+    store.save(1, t, blocking=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    out = reshard_restore(store, t, sh, 1)
+    assert out["w"].sharding == NamedSharding(mesh, P())
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(t["w"]))
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_flags_outlier():
+    mon = StragglerMonitor(window=16, trip_threshold=2)
+    for _ in range(16):
+        mon.observe(1.0)
+    r = mon.observe(10.0)
+    assert r["flagged"] and not r["tripped"]
+    r = mon.observe(10.0)
+    assert r["tripped"]
+
+
+def test_straggler_tolerates_noise():
+    mon = StragglerMonitor(window=16)
+    rng = np.random.default_rng(0)
+    flags = sum(mon.observe(1.0 + 0.01 * rng.standard_normal())["flagged"]
+                for _ in range(200))
+    assert flags <= 2
+
+
+def test_straggler_outliers_excluded_from_window():
+    mon = StragglerMonitor(window=16, trip_threshold=99)
+    for _ in range(16):
+        mon.observe(1.0)
+    for _ in range(10):                      # sustained slowness keeps flagging
+        assert mon.observe(5.0)["flagged"]

@@ -1,0 +1,61 @@
+"""The stevedore CLI (docker-shaped wrapper, paper §3.2)."""
+
+import json
+
+import pytest
+
+from repro.cli import main
+
+IMAGEFILE = """
+FROM scratch
+ARCH llama3.2-3b-smoke
+SHAPE train_4k seq_len=16 global_batch=4
+MESH local
+PRECISION params=float32 compute=float32
+COLLECTIVES generic
+SET optimizer={"lr":0.01,"warmup_steps":1,"total_steps":50}
+"""
+
+
+def test_cli_build_images_history_tag_ps_run(tmp_path, capsys):
+    f = tmp_path / "Imagefile"
+    f.write_text(IMAGEFILE)
+    root = str(tmp_path / "rt")
+
+    assert main(["--root", root, "build", "-t", "stable", str(f)]) == 0
+    out = capsys.readouterr().out
+    assert "built" in out and "arch" in out
+
+    assert main(["--root", root, "images"]) == 0
+    assert "stable" in capsys.readouterr().out
+
+    assert main(["--root", root, "history", "stable"]) == 0
+    assert "collectives" in capsys.readouterr().out
+
+    assert main(["--root", root, "inspect", "stable"]) == 0
+    cfg = json.loads(capsys.readouterr().out)
+    assert cfg["arch"]["name"] == "llama3.2-3b-smoke"
+
+    assert main(["--root", root, "tag", "stable", "prod"]) == 0
+    capsys.readouterr()
+
+    assert main(["--root", root, "run", "prod", "--steps", "2"]) == 0
+    out = capsys.readouterr().out
+    assert "loss=" in out
+
+    assert main(["--root", root, "ps"]) == 0
+    assert "llama3.2-3b-smoke" in capsys.readouterr().out
+
+
+def test_cli_resume_continues(tmp_path, capsys):
+    f = tmp_path / "Imagefile"
+    f.write_text(IMAGEFILE)
+    root = str(tmp_path / "rt")
+    main(["--root", root, "build", "-t", "s", str(f)])
+    main(["--root", root, "run", "s", "--steps", "2"])
+    capsys.readouterr()
+    # resume uses the latest overlay checkpoint... each run makes a new
+    # container; resume within the same overlay is exercised by the
+    # launch/train tests -- here we just assert a fresh run also works
+    assert main(["--root", root, "run", "s", "--steps", "1"]) == 0
+    assert "loss=" in capsys.readouterr().out

@@ -1,0 +1,174 @@
+"""Image / Imagefile / Registry tests incl. hypothesis property tests for
+the content-addressing invariants (paper §2.2's layered-FS semantics)."""
+
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.image import EnvImage, ImageBuilder, Layer
+from repro.core.imagefile import ImagefileError, parse_imagefile, render_imagefile
+from repro.core.registry import Registry, RegistryError
+
+
+def build_basic(**kw):
+    return (ImageBuilder.from_scratch()
+            .arch("llama3.2-3b", **kw)
+            .shape("train_4k")
+            .mesh("pod")
+            .collectives("generic")
+            .build())
+
+
+# ---------------------------------------------------------------------------
+# hashing invariants
+# ---------------------------------------------------------------------------
+
+def test_same_build_same_digest():
+    assert build_basic().digest == build_basic().digest
+
+
+def test_any_payload_change_changes_digest():
+    assert build_basic().digest != build_basic(n_layers=27).digest
+
+
+def test_layer_chain_integrity_enforced():
+    img = build_basic()
+    tampered = list(img.layers)
+    tampered[2] = Layer(kind=tampered[2].kind, payload={"name": "evil"},
+                        parent=tampered[2].parent)
+    with pytest.raises(ValueError, match="broken layer chain"):
+        EnvImage(tuple(tampered))
+
+
+def test_derived_image_shares_layer_objects():
+    base = build_basic()
+    derived = (ImageBuilder.from_image(base)
+               .set(remat="dots")
+               .build())
+    assert derived.layers[:len(base.layers)] == base.layers
+    assert derived.digest != base.digest
+
+
+scalars = st.one_of(st.integers(-1000, 1000), st.booleans(),
+                    st.text(st.characters(codec="ascii",
+                                          exclude_characters='"\\\n\r '),
+                            min_size=1, max_size=8))
+
+
+@given(st.dictionaries(st.text(st.characters(min_codepoint=97,
+                                             max_codepoint=122),
+                               min_size=1, max_size=8),
+                       scalars, max_size=5))
+@settings(max_examples=50, deadline=None)
+def test_property_digest_deterministic_and_order_free(payload):
+    """Layer digest depends only on content, not dict insertion order."""
+    l1 = Layer(kind="set", payload=payload)
+    l2 = Layer(kind="set", payload=dict(reversed(list(payload.items()))))
+    assert l1.digest == l2.digest
+    assert Layer.from_json(l1.to_json()).digest == l1.digest
+
+
+@given(st.dictionaries(st.text(st.characters(min_codepoint=97,
+                                             max_codepoint=122),
+                               min_size=1, max_size=8),
+                       st.integers(0, 100), min_size=1, max_size=4))
+@settings(max_examples=30, deadline=None)
+def test_property_different_payload_different_digest(payload):
+    l1 = Layer(kind="set", payload=payload)
+    k = next(iter(payload))
+    changed = dict(payload)
+    changed[k] = changed[k] + 1
+    assert Layer(kind="set", payload=changed).digest != l1.digest
+
+
+# ---------------------------------------------------------------------------
+# imagefile
+# ---------------------------------------------------------------------------
+
+IMAGEFILE = """
+# paper-style build file
+FROM scratch
+ARCH llama3.2-3b n_layers=27
+SHAPE train_4k global_batch=64
+MESH pod
+PRECISION compute=bfloat16 params=float32
+COLLECTIVES host zero1=true grad_compression=bfloat16
+SET remat=dots microbatches=2
+LABEL tier=stable
+"""
+
+
+def test_imagefile_parse_and_config():
+    img = parse_imagefile(IMAGEFILE)
+    cfg = img.config()
+    assert cfg["arch"]["overrides"]["n_layers"] == 27
+    assert cfg["shape"]["global_batch"] == 64
+    assert cfg["collectives"]["zero1"] is True
+    assert cfg["settings"]["microbatches"] == 2
+    assert cfg["labels"]["tier"] == "stable"
+
+
+def test_imagefile_roundtrip_preserves_digest():
+    img = parse_imagefile(IMAGEFILE)
+    again = parse_imagefile(render_imagefile(img))
+    assert again.digest == img.digest
+
+
+def test_imagefile_rejects_garbage():
+    with pytest.raises(ImagefileError):
+        parse_imagefile("ARCH before-from")
+    with pytest.raises(ImagefileError):
+        parse_imagefile("FROM scratch\nBOGUS directive")
+
+
+def test_imagefile_from_registry_tag(tmp_path):
+    reg = Registry(tmp_path)
+    base = parse_imagefile(IMAGEFILE)
+    reg.push(base, tag="stable")
+    derived = parse_imagefile("FROM stable\nSET extra=1\n", registry=reg)
+    assert derived.layers[:len(base.layers)] == base.layers
+    assert derived.config()["settings"]["extra"] == 1
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_push_pull_roundtrip(tmp_path):
+    reg = Registry(tmp_path)
+    img = build_basic()
+    reg.push(img, tag="v1")
+    assert reg.pull("v1").digest == img.digest
+    assert reg.pull(img.digest).digest == img.digest
+    assert reg.pull(img.digest[:12]).digest == img.digest
+
+
+def test_registry_layer_dedupe(tmp_path):
+    """Pushing a derived image transfers ONLY the new layers (paper §2.2)."""
+    reg = Registry(tmp_path)
+    base = build_basic()
+    s1 = reg.push(base, tag="base")
+    assert s1.layers_transferred == len(base.layers)
+    derived = ImageBuilder.from_image(base).set(remat="dots").build()
+    s2 = reg.push(derived, tag="derived")
+    assert s2.layers_transferred == 1
+    assert s2.layers_reused == len(base.layers)
+    assert s2.dedupe_fraction > 0.8
+
+
+def test_registry_detects_corruption(tmp_path):
+    reg = Registry(tmp_path)
+    img = build_basic()
+    reg.push(img, tag="v1")
+    # corrupt one layer blob
+    victim = next((tmp_path / "layers").iterdir())
+    victim.write_text(json.dumps({"kind": "set", "payload": {"evil": 1},
+                                  "parent": None}))
+    with pytest.raises(RegistryError, match="hash mismatch"):
+        reg.pull("v1")
+
+
+def test_registry_unknown_ref(tmp_path):
+    with pytest.raises(RegistryError):
+        Registry(tmp_path).pull("nope")

@@ -1,0 +1,179 @@
+"""Distribution-layer invariants: logical rules, safe specs, attention
+geometry for every assigned arch at TP=16, MoE parity (pure vs shard_map)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.container import _safe_spec
+from repro.dist.mesh import PLATFORMS, batch_axes, make_platform_mesh
+from repro.dist.sharding import ShardingRules
+from repro.models.attention import resolve_geometry
+from repro.models.layers import padded_vocab
+from repro.models.moe import moe_forward, moe_forward_spmd
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_platform_mesh("local")
+
+
+# ---------------------------------------------------------------------------
+# attention geometry: padding + kv replication for every assigned arch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_config(a).n_heads > 0])
+@pytest.mark.parametrize("tp", [1, 8, 16])
+def test_geometry_invariants(arch, tp):
+    cfg = get_config(arch)
+    g = resolve_geometry(cfg, tp)
+    assert g.n_q % tp == 0                  # q heads shard
+    assert g.n_kv % tp == 0 or g.n_kv == g.n_q  # kv shard (or padded MHA)
+    assert g.n_q % g.n_kv == 0              # grouping is integral
+    assert g.n_q >= cfg.n_heads             # padding only ever adds
+    if tp == 1:
+        assert g.n_q == cfg.n_heads         # canonical at no TP
+        assert g.n_kv == cfg.n_kv_heads
+
+
+def test_geometry_padding_overhead_bounded():
+    """Head padding must stay below 2x (it is honest, counted compute)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        if not cfg.n_heads:
+            continue
+        g = resolve_geometry(cfg, 16)
+        assert g.n_q <= 2 * cfg.n_heads, (arch, g)
+
+
+@given(h=st.integers(1, 128), kv=st.integers(1, 128),
+       tp=st.sampled_from([1, 2, 4, 8, 16]))
+@settings(max_examples=200, deadline=None)
+def test_property_geometry_always_valid(h, kv, tp):
+    if h % kv:                              # GQA requires kv | h canonically
+        kv = max(1, h // max(1, h // kv))
+        if h % kv:
+            return
+    cfg = get_config("llama3.2-3b").with_overrides(
+        n_heads=h, n_kv_heads=kv, head_dim=64)
+    g = resolve_geometry(cfg, tp)
+    assert g.n_q % tp == 0
+    assert g.n_q % g.n_kv == 0
+    assert g.n_kv % tp == 0 or g.n_kv >= g.n_q
+
+
+# ---------------------------------------------------------------------------
+# vocab padding
+# ---------------------------------------------------------------------------
+
+@given(v=st.integers(1, 1_000_000))
+@settings(max_examples=100, deadline=None)
+def test_property_padded_vocab(v):
+    vp = padded_vocab(v)
+    assert vp >= v and vp % 128 == 0 and vp - v < 128
+
+
+# ---------------------------------------------------------------------------
+# safe specs: never produce a non-divisible sharding
+# ---------------------------------------------------------------------------
+
+@given(dim0=st.integers(1, 300), dim1=st.integers(1, 300))
+@settings(max_examples=100, deadline=None)
+def test_property_safe_spec_divisibility(dim0, dim1):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = ShardingRules.default()
+    spec = _safe_spec((dim0, dim1), ("batch", "mlp"), mesh, rules)
+    for d, e in zip((dim0, dim1), spec):
+        if e is None:
+            continue
+        axes = (e,) if isinstance(e, str) else e
+        k = 1
+        for a in axes:
+            k *= mesh.shape[a]
+        assert d % k == 0
+
+
+def test_rules_map_known_axes(mesh):
+    rules = ShardingRules.default()
+    assert rules.mesh_axes(("batch", None, "mlp"), mesh) == P(("data",), None,
+                                                              "model")
+    # fsdp adds embed -> batch axes
+    fr = ShardingRules.default(fsdp=True)
+    assert fr.rules["embed"] == ("pod", "data")
+
+
+def test_rules_no_axis_reuse_within_spec(mesh):
+    """One mesh axis must not shard two dims of the same tensor."""
+    rules = ShardingRules.default().with_(embed="model")
+    spec = rules.mesh_axes(("embed", "mlp"), mesh)   # both want "model"
+    used = [a for e in spec if e for a in ((e,) if isinstance(e, str) else e)]
+    assert len(used) == len(set(used))
+
+
+# ---------------------------------------------------------------------------
+# MoE: pure-XLA vs shard_map paths agree (tp=1 mesh executes both)
+# ---------------------------------------------------------------------------
+
+def test_moe_spmd_matches_pure(mesh):
+    cfg = get_config("moonshot-v1-16b-a3b").reduced().with_overrides(
+        capacity_factor=8.0)
+    from repro.models.moe import moe_defs
+    from repro.models import params as PM
+    p = PM.materialize(moe_defs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+    y1, a1 = moe_forward(p, x, cfg)
+    y2, a2 = moe_forward_spmd(p, x, cfg, mesh)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    assert float(a1) == pytest.approx(float(a2), abs=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    """Tiny capacity must drop tokens (outputs change), dropless must not."""
+    cfg = get_config("llama4-scout-17b-a16e").reduced()
+    from repro.models.moe import moe_defs, capacity
+    from repro.models import params as PM
+    assert capacity(cfg.with_overrides(capacity_factor=99.0), 64) >= 64
+    p = PM.materialize(moe_defs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model))
+    y_tight, _ = moe_forward(p, x, cfg.with_overrides(capacity_factor=0.1))
+    y_loose, _ = moe_forward(p, x, cfg.with_overrides(capacity_factor=16.0))
+    assert float(jnp.abs(y_tight - y_loose).max()) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# multi-device paths (subprocess with forced host devices)
+# ---------------------------------------------------------------------------
+
+MULTIDEV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.models.moe import moe_defs, moe_forward, moe_forward_spmd
+from repro.models import params as PM
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = get_config("moonshot-v1-16b-a3b").reduced().with_overrides(
+    n_experts=4, top_k=2, capacity_factor=8.0)
+p = PM.materialize(moe_defs(cfg), jax.random.key(0))
+x = jax.random.normal(jax.random.key(1), (4, 8, cfg.d_model))
+y1, a1 = moe_forward(p, x, cfg)
+y2, a2 = jax.jit(lambda p_, x_: moe_forward_spmd(p_, x_, cfg, mesh))(p, x)
+err = float(jnp.abs(y1 - y2).max())
+assert err < 2e-4, err
+print("MOE_TP_OK", err)
+"""
+
+
+def test_moe_spmd_multidevice_parity(tmp_path):
+    import subprocess, sys
+    r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
+                       capture_output=True, text=True,
+                       env={**__import__("os").environ,
+                            "PYTHONPATH": "src"}, cwd=".")
+    assert "MOE_TP_OK" in r.stdout, r.stdout + r.stderr
