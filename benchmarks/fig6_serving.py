@@ -1,0 +1,148 @@
+"""Fig. 6 (new): continuous batching vs the static-batch serving baseline.
+
+The orchestrator claim, measured: at EQUAL batch capacity (one replica of
+``SLOTS`` KV slots vs a static batch of ``SLOTS``), a staggered
+variable-length request trace decodes >= 1.5x faster under continuous
+batching, because finished requests release their slot the same tick
+instead of idling until the longest request in their wave completes.
+
+Metrics (also written to ``BENCH_serving.json``):
+  * decode throughput (useful tokens / decode seconds) for both modes;
+  * decode ticks (the hardware-independent view of the same ratio);
+  * p50/p99 request latency in ticks for the continuous mode.
+
+Run standalone (``python -m benchmarks.fig6_serving``) or via
+``python -m benchmarks.run --only fig6_serving``.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import tempfile
+from contextlib import redirect_stdout
+from pathlib import Path
+from types import SimpleNamespace
+
+import numpy as np
+
+ARCH = "llama3.2-3b"
+SLOTS = 8           # equal capacity on both sides
+REQUESTS = 32
+REPS = 3            # best-of-N timing reps per mode (noisy shared CPUs)
+PROMPT = 24
+GEN = 64            # static decodes GEN steps for every wave member
+MAX_LEN = 104
+
+# big enough that a decode tick is compute-dominated (a tiny smoke model
+# would measure host dispatch overhead, not serving policy)
+IMAGEFILE = f"""
+FROM scratch
+ARCH {ARCH} n_layers=4 d_model=256 n_heads=8 n_kv_heads=4 head_dim=32 d_ff=768 vocab_size=8192
+SHAPE decode_32k seq_len={MAX_LEN} global_batch={SLOTS}
+MESH local
+PRECISION compute=float32 params=float32
+COLLECTIVES generic
+"""
+
+
+def _trace(rng, vocab):
+    """Staggered arrivals with the SAME heavy-tailed budgets the static
+    driver replays (launch.serve._tail_budgets): most requests short, a few
+    run the full budget -- the shape that makes a static wave idle most of
+    its slots on its longest member."""
+    from repro.launch.serve import _tail_budgets
+    from repro.orchestrator import GenRequest
+    budgets = _tail_budgets(GEN, REQUESTS)
+    return [GenRequest(rid=i,
+                       prompt=rng.integers(0, vocab, PROMPT),
+                       max_new_tokens=budgets[i],
+                       arrival=i // 8)
+            for i in range(REQUESTS)]
+
+
+def run() -> list[tuple[str, float, str]]:
+    from repro.core.runtime import Runtime
+    from repro.launch.serve import serve_static
+    from repro.orchestrator import ContinuousScheduler, Pod
+
+    rt = Runtime(tempfile.mkdtemp(prefix="stevedore-fig6-"))
+    image = rt.build(IMAGEFILE, tag="bench")
+    rng = np.random.default_rng(0)
+
+    # -- continuous: one replica, SLOTS slots --------------------------------
+    pod = Pod(rt, "bench", replicas=1, n_slots=SLOTS, max_len=MAX_LEN)
+    eng = pod.engines[0]
+    cfg = eng.container.arch
+    # warm the decode + prefill executables out of the measurement
+    warm = ContinuousScheduler(pod, fairness_cap=4)
+    warm.submit(_trace(rng, cfg.vocab_size)[:SLOTS])
+    warm.run()
+    # best-of-REPS reps (min decode time): continuous makes ~8x more
+    # dispatches than the scanned static loop, so background load noise
+    # hits it harder; min-time is the standard noisy-timer estimator
+    best = None
+    for _ in range(REPS):
+        reqs = _trace(rng, cfg.vocab_size)
+        eng.decode_s = eng.prefill_s = 0.0
+        t0 = eng.decode_ticks
+        # fresh scheduler per rep: tick restarts at 0, stagger honored
+        sched = ContinuousScheduler(pod, fairness_cap=4)
+        sched.submit(reqs)
+        sched.run()
+        if best is None or eng.decode_s < best[0]:
+            best = (eng.decode_s, eng.decode_ticks - t0, reqs)
+    cont_s, cont_ticks, reqs = best
+    cont_tokens = sum(len(r.tokens) for r in reqs)
+    # latency from arrival (the stagger is offered load, not queueing delay)
+    lat = sorted(r.done_tick - max(r.arrival, r.submit_tick) for r in reqs)
+    p50 = lat[len(lat) // 2]
+    p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+
+    # -- static baseline: the actual launch/serve.py --mode static driver,
+    # best-of-REPS (first call warms prefill/generate through the cache) ----
+    static_args = SimpleNamespace(slots=SLOTS, prompt_len=PROMPT, gen=GEN,
+                                  requests=REQUESTS, seed=0, platform=None)
+    best_static = None
+    for _ in range(REPS + 1):               # +1: first rep is the warm-up
+        with redirect_stdout(io.StringIO()):
+            res = serve_static(rt, "bench", static_args)
+        if best_static is None or res["decode_s"] < best_static["decode_s"]:
+            best_static = res
+    static_s = best_static["decode_s"]
+    static_tokens = best_static["tokens"]
+    static_ticks = best_static["decode_ticks"]
+
+    cont_tps = cont_tokens / max(cont_s, 1e-9)
+    stat_tps = static_tokens / max(static_s, 1e-9)
+    speedup = cont_tps / max(stat_tps, 1e-9)
+    tick_ratio = static_ticks / max(cont_ticks, 1)
+
+    payload = {
+        "arch": ARCH, "slots": SLOTS, "requests": REQUESTS,
+        "prompt_len": PROMPT, "gen_max": GEN,
+        "continuous": {"tokens": cont_tokens, "decode_s": cont_s,
+                       "decode_ticks": cont_ticks, "tok_per_s": cont_tps,
+                       "p50_latency_ticks": p50, "p99_latency_ticks": p99},
+        "static": {"tokens": static_tokens, "decode_s": static_s,
+                   "decode_ticks": static_ticks, "tok_per_s": stat_tps},
+        "decode_speedup_x": speedup,
+        "tick_ratio_x": tick_ratio,
+    }
+    Path("BENCH_serving.json").write_text(json.dumps(payload, indent=2))
+
+    return [
+        ("fig6/continuous_decode_tok_per_s", cont_tps,
+         f"{cont_tokens} tok / {cont_ticks} ticks"),
+        ("fig6/static_decode_tok_per_s", stat_tps,
+         f"{static_tokens} useful tok / {static_ticks} ticks"),
+        ("fig6/decode_speedup_x", speedup, "continuous vs static, equal capacity"),
+        ("fig6/tick_ratio_x", tick_ratio, "static ticks / continuous ticks"),
+        ("fig6/p50_latency_ticks", float(p50), ""),
+        ("fig6/p99_latency_ticks", float(p99), ""),
+    ]
+
+
+if __name__ == "__main__":
+    for name, value, derived in run():
+        print(f"{name},{value:.3f},{derived}")

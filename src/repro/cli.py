@@ -4,6 +4,7 @@
   PYTHONPATH=src python -m repro.cli images
   PYTHONPATH=src python -m repro.cli history stable
   PYTHONPATH=src python -m repro.cli run stable --platform local --steps 5
+  PYTHONPATH=src python -m repro.cli serve stable --replicas 2 --slots 8
   PYTHONPATH=src python -m repro.cli ps
   PYTHONPATH=src python -m repro.cli tag <digest> prod
 
@@ -21,6 +22,19 @@ import sys
 from pathlib import Path
 
 from repro.core.runtime import Runtime
+
+
+def _pid_alive(pid: int) -> bool:
+    import os
+    try:
+        os.kill(int(pid), 0)
+    except ProcessLookupError:
+        return False
+    except ValueError:
+        return False
+    except PermissionError:
+        return True        # exists, owned by another user
+    return True
 
 
 def cmd_build(rt: Runtime, args) -> int:
@@ -57,6 +71,26 @@ def cmd_ps(rt: Runtime, args) -> int:
         print(f"{rec['id'][:24]:26s} {rec['arch']:24s} "
               f"{rec.get('cell') or '-':12s} {rec['platform']:9s} "
               f"{rec.get('abi','')}")
+    pods_dir = rt.root / "pods"
+    if pods_dir.exists():
+        for p in sorted(pods_dir.glob("*.json")):
+            try:
+                pod = json.loads(p.read_text())
+            except (OSError, json.JSONDecodeError):
+                continue               # mid-write or corrupt; skip, not crash
+            if not isinstance(pod, dict):
+                continue
+            reps = pod.get("replicas", [])
+            active = sum(r.get("active", 0) for r in reps)
+            phase = pod.get("phase", "-")
+            pid = pod.get("pid")
+            if pid is not None and not _pid_alive(pid):
+                phase = "exited"        # stale snapshot of a dead process
+            print(f"{pod.get('pod', p.stem):26s} "
+                  f"image={pod.get('image', '?')} "
+                  f"replicas={len(reps)} capacity={pod.get('capacity', 0)} "
+                  f"active={active} {phase:8s} "
+                  f"ref={pod.get('ref') or '-'}")
     return 0
 
 
@@ -69,6 +103,21 @@ def cmd_run(rt: Runtime, args) -> int:
     if args.resume:
         argv += ["--resume"]
     train_main(argv)
+    return 0
+
+
+def cmd_serve(rt: Runtime, args) -> int:
+    from repro.launch.serve import main as serve_main
+    argv = ["--image", args.ref, "--root", str(rt.root),
+            "--mode", args.mode,
+            "--replicas", str(args.replicas), "--slots", str(args.slots),
+            "--requests", str(args.requests), "--gen", str(args.gen),
+            "--prompt-len", str(args.prompt_len), "--seed", str(args.seed),
+            "--fairness-cap", str(args.fairness_cap),
+            "--arrive-per-tick", str(args.arrive_per_tick)]
+    if args.platform:
+        argv += ["--platform", args.platform]
+    serve_main(argv)
     return 0
 
 
@@ -107,11 +156,27 @@ def main(argv=None) -> int:
     p.add_argument("--steps", type=int, default=10)
     p.add_argument("--resume", action="store_true")
 
+    p = sub.add_parser("serve",
+                       help="serve a Pod of replicas (continuous batching)")
+    p.add_argument("ref")
+    p.add_argument("--platform", default=None)
+    p.add_argument("--mode", choices=("continuous", "static"),
+                   default="continuous")
+    p.add_argument("--replicas", type=int, default=2)
+    p.add_argument("--slots", type=int, default=8)
+    p.add_argument("--requests", type=int, default=32)
+    p.add_argument("--prompt-len", type=int, default=64)
+    p.add_argument("--gen", type=int, default=32)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--fairness-cap", type=int, default=8)
+    p.add_argument("--arrive-per-tick", type=int, default=8)
+
     args = ap.parse_args(argv)
     rt = Runtime(args.root)
     return {
         "build": cmd_build, "images": cmd_images, "history": cmd_history,
-        "tag": cmd_tag, "ps": cmd_ps, "run": cmd_run, "inspect": cmd_inspect,
+        "tag": cmd_tag, "ps": cmd_ps, "run": cmd_run, "serve": cmd_serve,
+        "inspect": cmd_inspect,
     }[args.cmd](rt, args)
 
 

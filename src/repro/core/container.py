@@ -292,6 +292,162 @@ class Container:
     def decode_fn(self) -> Callable:
         return ServeStepBuilder(self.model, self.mesh, self.rules).build_decode()
 
+    # -- serving: slot-granular cache + compile-cached serve steps -------------
+    def slot_cache_specs(self, n_slots: int, max_len: int):
+        """Abstract KV/recurrent cache for a bank of ``n_slots`` independent
+        request slots (each row one request, ``max_len`` positions)."""
+        return self._abstract_cache(
+            self.model.cache_defs(n_slots, max_len, self.cache_dtype))
+
+    def slot_cache_shardings(self, n_slots: int, max_len: int):
+        return self._cache_shardings(
+            self.model.cache_defs(n_slots, max_len, self.cache_dtype))
+
+    def init_slot_cache(self, n_slots: int, max_len: int):
+        """Zero-initialised slot cache, placed per the image's shardings."""
+        specs = self.slot_cache_specs(n_slots, max_len)
+        sh = self.slot_cache_shardings(n_slots, max_len)
+        return jax.tree.map(
+            lambda s, nsh: jax.device_put(jnp.zeros(s.shape, s.dtype), nsh),
+            specs, sh)
+
+    def _cache_shardings(self, cache_defs):
+        from repro.models.params import is_def
+        return jax.tree.map(
+            lambda d: NamedSharding(self.mesh, _safe_spec(
+                d.shape, d.logical, self.mesh, self.rules)),
+            cache_defs, is_leaf=is_def)
+
+    def _batch_sharding(self, shape):
+        return NamedSharding(self.mesh, _safe_spec(
+            shape, ("batch",) + (None,) * (len(shape) - 1), self.mesh,
+            self.rules))
+
+    def lower_serve_step(self, kind: str, *, batch: int | None = None,
+                         prompt_len: int | None = None,
+                         cache_len: int | None = None,
+                         gen_steps: int | None = None, donate: bool = True):
+        """jit + lower a serving step at arbitrary (non-cell) shapes.
+
+        kinds: ``prefill`` (B,P -> last_logits+cache), ``prefill_slot``
+        (1,P bucket + length -> first token + cache), ``decode_slots``
+        (slot bank, per-row positions), ``generate`` (scanned greedy loop).
+        All carry explicit in/out shardings -- replicated-output caches
+        would all-gather the full KV (see lower_step NOTE).
+        """
+        from repro.models.layers import padded_vocab
+        b = ServeStepBuilder(self.model, self.mesh, self.rules)
+        pspec = self.param_shardings()
+        rep = NamedSharding(self.mesh, P())
+        vp = padded_vocab(self.arch.vocab_size)
+        aparams = self.abstract_params()
+        tok = jnp.int32
+
+        if kind == "prefill":
+            fn = b.build_prefill(cache_len)
+            toks = jax.ShapeDtypeStruct((batch, prompt_len), tok)
+            cache_sh = self._cache_shardings(
+                self.model.cache_defs(batch, cache_len, self.cache_dtype))
+            logits_sh = NamedSharding(self.mesh, _safe_spec(
+                (batch, vp), ("batch", "vocab"), self.mesh, self.rules))
+            jitted = jax.jit(
+                fn, in_shardings=(pspec, self._batch_sharding(toks.shape)),
+                out_shardings=(logits_sh, cache_sh))
+            return jitted.lower(aparams, toks)
+        if kind == "prefill_slot":
+            fn = b.build_prefill_slot(cache_len)
+            toks = jax.ShapeDtypeStruct((1, prompt_len), tok)
+            length = jax.ShapeDtypeStruct((), tok)
+            cache_sh = self._cache_shardings(
+                self.model.cache_defs(1, cache_len, self.cache_dtype))
+            jitted = jax.jit(
+                fn,
+                in_shardings=(pspec, self._batch_sharding(toks.shape), rep),
+                out_shardings=(rep, cache_sh))
+            return jitted.lower(aparams, toks, length)
+        if kind == "decode_slots":
+            fn = b.build_decode_slots()
+            cache = self.slot_cache_specs(batch, cache_len)
+            cache_sh = self.slot_cache_shardings(batch, cache_len)
+            toks = jax.ShapeDtypeStruct((batch, 1), tok)
+            pos = jax.ShapeDtypeStruct((batch,), tok)
+            tok_sh = self._batch_sharding(toks.shape)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(pspec, cache_sh, tok_sh,
+                              self._batch_sharding(pos.shape)),
+                out_shardings=(self._batch_sharding(pos.shape), cache_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            return jitted.lower(aparams, cache, toks, pos)
+        if kind == "decode_chunk":
+            fn = b.build_decode_chunk(gen_steps)
+            cache = self.slot_cache_specs(batch, cache_len)
+            cache_sh = self.slot_cache_shardings(batch, cache_len)
+            toks = jax.ShapeDtypeStruct((batch, 1), tok)
+            pos = jax.ShapeDtypeStruct((batch,), tok)
+            tok_sh = self._batch_sharding(toks.shape)
+            pos_sh = self._batch_sharding(pos.shape)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(pspec, cache_sh, tok_sh, pos_sh),
+                out_shardings=(self._batch_sharding((batch, gen_steps)),
+                               tok_sh, pos_sh, cache_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            return jitted.lower(aparams, cache, toks, pos)
+        if kind == "generate":
+            fn = b.build_generate_loop(gen_steps)
+            cache = self._abstract_cache(
+                self.model.cache_defs(batch, cache_len, self.cache_dtype))
+            cache_sh = self._cache_shardings(
+                self.model.cache_defs(batch, cache_len, self.cache_dtype))
+            first = jax.ShapeDtypeStruct((batch, 1), tok)
+            start = jax.ShapeDtypeStruct((), tok)
+            out_sh = self._batch_sharding((batch, gen_steps))
+            jitted = jax.jit(
+                fn,
+                in_shardings=(pspec, cache_sh,
+                              self._batch_sharding(first.shape), rep),
+                out_shardings=(out_sh, cache_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            return jitted.lower(aparams, cache, first, start)
+        raise ValueError(f"unknown serve step kind {kind!r}")
+
+    def _serve_cache_digest(self) -> str:
+        """Cache identity for serve steps: only the image config sections
+        that determine the lowered computation (arch/mesh/precision/
+        settings). Keying on the raw image digest would defeat the rollover
+        warm-start -- a release that only re-points a tag at an image with
+        new LABEL/COLLECTIVES layers would always miss despite lowering the
+        byte-identical serve step."""
+        import hashlib
+        cfg = self.image.config()
+        rel = {k: cfg.get(k) for k in ("arch", "mesh", "precision",
+                                       "settings")}
+        return hashlib.sha256(
+            json.dumps(rel, sort_keys=True, default=str).encode()).hexdigest()
+
+    def compile_serve_step(self, kind: str, **shapes):
+        """lower+compile a serve step through the CompileCache when attached.
+
+        This is the import-problem fix applied to serving: every replica of
+        a Pod, a rerun of the same driver, or a rollover to a re-tagged
+        image whose serving-relevant layers are unchanged deserializes the
+        executable instead of re-tracing (see _serve_cache_digest).
+        """
+        if self.compile_cache is None:
+            return self.lower_serve_step(kind, **shapes).compile()
+        sig = ",".join(f"{k}={v}" for k, v in sorted(shapes.items())
+                       if v is not None)
+        key = self.compile_cache.key(
+            image_digest=self._serve_cache_digest(),
+            step_kind=f"serve:{kind}[{sig}]",
+            mesh=self.mesh, args_tree=None)
+        return self.compile_cache.get_or_build(
+            key, lambda: self.lower_serve_step(kind, **shapes))
+
     # -- lowering (the dry-run entry) ------------------------------------------
     def lower_step(self, kind: str | None = None, donate: bool = True):
         """jit + lower the step for this image's shape cell. Returns Lowered."""

@@ -1,0 +1,27 @@
+"""Distribution layer: platform meshes + logical-axis sharding rules.
+
+The image's MESH layer names a *platform* (local / pod / multipod); the
+container resolves it to a concrete device mesh here. Model code never sees
+the mesh -- it annotates tensors with logical axis names, and the rules in
+``dist.sharding`` translate those names into mesh ``PartitionSpec``s.
+"""
+
+from repro.dist.mesh import PLATFORMS, batch_axes, make_platform_mesh
+from repro.dist.sharding import (
+    ShardingRules,
+    check_divisibility,
+    constrain,
+    logical_sharding,
+    safe_spec,
+)
+
+__all__ = [
+    "PLATFORMS",
+    "batch_axes",
+    "make_platform_mesh",
+    "ShardingRules",
+    "check_divisibility",
+    "constrain",
+    "logical_sharding",
+    "safe_spec",
+]

@@ -1,0 +1,24 @@
+"""Version compatibility for the shard_map API.
+
+Callers use the modern keyword form ``shard_map(f, mesh=..., in_specs=...,
+out_specs=..., axis_names={...}, check_vma=False)``. On older jax (which
+ships ``jax.experimental.shard_map`` with ``auto=``/``check_rep=``) the
+arguments are translated: ``auto`` is the complement of ``axis_names``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)

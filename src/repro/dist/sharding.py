@@ -1,0 +1,163 @@
+"""Logical-axis sharding rules: model-code axis names -> mesh PartitionSpecs.
+
+Model modules annotate tensors with *logical* axis names ("batch", "embed",
+"mlp", ...). A ``ShardingRules`` table maps each name to zero or more mesh
+axes; ``mesh_axes`` / ``safe_spec`` translate a logical tuple into a
+``PartitionSpec`` with two safety guarantees:
+
+  * an axis absent from the mesh is silently dropped (the same rules drive
+    the 2-axis local mesh and the 3-axis multipod mesh);
+  * one mesh axis never shards two dims of the same tensor (first logical
+    dim to claim it wins);
+
+and, for ``safe_spec`` (which also sees the shape):
+
+  * a dim is never sharded by more mesh axes than divide it evenly
+    (a greedy prefix of the rule's axes is kept, preserving collective
+    layout order).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rule = str | tuple[str, ...] | None
+
+# The canonical table. Batch-like dims shard over the replica axes
+# ("pod","data", slow-to-fast -- see dist.mesh.batch_axes); tensor-parallel
+# dims over "model". "embed" stays replicated unless FSDP turns it on.
+_DEFAULT_RULES: dict[str, Rule] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "capacity": ("pod", "data"),
+    "rnn": "model",
+    "layers": None,
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Immutable logical-axis -> mesh-axis table."""
+
+    rules: Mapping[str, Rule]
+
+    @classmethod
+    def default(cls, fsdp: bool = False,
+                seq_parallel: bool = False) -> "ShardingRules":
+        r = dict(_DEFAULT_RULES)
+        if fsdp:
+            # param "embed" dims shard over the replica axes (weight FSDP;
+            # ZeRO-1 applies the same rule to optimizer state only).
+            r["embed"] = ("pod", "data")
+        if seq_parallel:
+            # activations' sequence dim shards over the model axis between
+            # attention/MLP regions (constraints are best-effort: safe_spec
+            # drops it wherever seq does not divide).
+            r["seq"] = "model"
+        return cls(r)
+
+    def with_(self, **updates: Rule) -> "ShardingRules":
+        r = dict(self.rules)
+        for k, v in updates.items():
+            r[k] = tuple(v) if isinstance(v, list) else v
+        return ShardingRules(r)
+
+    def mesh_axes(self, logical: Sequence[str | None], mesh: Mesh,
+                  exclude_axes: Sequence[str] = ()) -> P:
+        """Translate logical axis names into a PartitionSpec for ``mesh``.
+
+        Mesh axes already claimed (or listed in ``exclude_axes`` -- e.g. the
+        manual axes of an enclosing shard_map) are never reused.
+        """
+        used: set[str] = set(exclude_axes)
+        entries: list[Rule] = []
+        for name in logical:
+            rule = self.rules.get(name) if name is not None else None
+            if rule is None:
+                entries.append(None)
+            elif isinstance(rule, str):
+                if rule in mesh.axis_names and rule not in used:
+                    used.add(rule)
+                    entries.append(rule)
+                else:
+                    entries.append(None)
+            else:
+                ax = tuple(a for a in rule
+                           if a in mesh.axis_names and a not in used)
+                used.update(ax)
+                entries.append(ax if ax else None)
+        return P(*entries)
+
+
+def _axes_of(entry: Rule) -> tuple[str, ...]:
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+def safe_spec(shape: Sequence[int], logical: Sequence[str | None], mesh: Mesh,
+              rules: ShardingRules, exclude_axes: Sequence[str] = ()) -> P:
+    """A PartitionSpec for ``shape`` that is guaranteed divisible.
+
+    Per dim, a greedy prefix of the rule's mesh axes is kept while the
+    cumulative axis product divides the dim; order is preserved so the
+    collective layout never flips between callers.
+    """
+    spec = rules.mesh_axes(logical, mesh, exclude_axes=exclude_axes)
+    entries: list[Rule] = []
+    for dim, entry in zip(shape, spec):
+        axes = _axes_of(entry)
+        kept: list[str] = []
+        prod = 1
+        for a in axes:
+            if dim % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+            else:
+                break
+        if not kept:
+            entries.append(None)
+        elif isinstance(entry, str):
+            entries.append(kept[0])
+        else:
+            entries.append(tuple(kept))
+    return P(*entries)
+
+
+def logical_sharding(logical: Sequence[str | None], mesh: Mesh,
+                     rules: ShardingRules) -> NamedSharding:
+    """NamedSharding for a tensor described only by logical axes (params:
+    their def shapes are constructed divisible -- heads padded to TP,
+    vocab padded to a lane multiple -- so no shape check is needed)."""
+    return NamedSharding(mesh, rules.mesh_axes(logical, mesh))
+
+
+def check_divisibility(shape: Sequence[int], spec: P, mesh: Mesh) -> None:
+    """Raise if ``spec`` shards any dim of ``shape`` non-evenly."""
+    for i, (dim, entry) in enumerate(zip(shape, spec)):
+        k = 1
+        for a in _axes_of(entry):
+            k *= mesh.shape[a]
+        if dim % k:
+            raise ValueError(
+                f"dim {i} of shape {tuple(shape)} not divisible by mesh axes "
+                f"{entry!r} (product {k})")
+
+
+def constrain(x: jax.Array, logical: Sequence[str | None], mesh: Mesh,
+              rules: ShardingRules,
+              exclude_axes: Sequence[str] = ()) -> jax.Array:
+    """with_sharding_constraint via safe_spec (the injectable model hook)."""
+    spec = safe_spec(x.shape, logical, mesh, rules, exclude_axes=exclude_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

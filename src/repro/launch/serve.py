@@ -1,7 +1,16 @@
-"""Serving driver: batched prefill + greedy decode from an image.
+"""Serving driver: a thin CLI over the Pod orchestrator.
 
-  PYTHONPATH=src python -m repro.launch.serve --image <tag> \
-      [--platform local] --requests 8 --prompt-len 64 --gen 32
+Continuous (default): a Pod of Container replicas serves staggered
+variable-length requests via continuous batching:
+
+  PYTHONPATH=src python -m repro.launch.serve --image <tag|Imagefile> \
+      --replicas 2 --slots 8 --requests 32 --gen 32
+
+Static (--mode static): the pre-orchestrator baseline -- one fixed batch,
+prefill + scanned greedy decode -- kept as the fig6 comparison point. Both
+modes compile through the Container serve path (explicit in/out shardings +
+CompileCache), not ad-hoc re-jits: a second run of either mode, or a second
+replica, deserializes the executables instead of re-tracing.
 """
 
 from __future__ import annotations
@@ -15,62 +24,164 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.runtime import Runtime
-from repro.serve.serve_step import greedy_sample
+
+
+def _tail_budgets(gen: int, n: int) -> list[int]:
+    """Heavy-tailed decode budgets: most requests short, one in four runs
+    the full budget (the production shape that makes a static wave idle on
+    its longest member). One helper so both serving modes -- and the fig6
+    benchmark -- replay the SAME trace."""
+    tail = [2, max(2, gen // 8), max(2, gen // 4), gen]
+    return [tail[i % len(tail)] for i in range(n)]
+
+
+def _build_requests(args, cfg, rng):
+    """Deterministic staggered, variable-length trace."""
+    from repro.orchestrator import GenRequest
+    reqs = []
+    budgets = _tail_budgets(args.gen, args.requests)
+    for i in range(args.requests):
+        plen = int(args.prompt_len * (0.5 + 0.5 * ((i * 7919) % 97) / 96))
+        reqs.append(GenRequest(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, max(1, plen)),
+            max_new_tokens=budgets[i],
+            arrival=i // max(1, args.arrive_per_tick)))
+    return reqs
+
+
+def serve_continuous(rt: Runtime, image, args) -> dict:
+    from repro.orchestrator import ContinuousScheduler, Pod
+    max_len = args.prompt_len + args.gen + 8   # + chunk-overshoot margin
+    pod = Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
+              max_len=max_len, platform=args.platform, seed=args.seed)
+    sched = ContinuousScheduler(pod, fairness_cap=args.fairness_cap)
+    cfg = pod.engines[0].container.arch
+    rng = np.random.default_rng(args.seed)
+    reqs = _build_requests(args, cfg, rng)
+
+    t0 = time.perf_counter()
+    sched.submit(reqs)
+    done = sched.run()
+    wall = time.perf_counter() - t0
+    pod.write_state(final=True)     # terminal phase: ps stays honest after exit
+
+    toks = sum(len(r.tokens) for r in done)
+    dec_s = sum(e.decode_s for e in pod.engines)
+    pre_s = sum(e.prefill_s for e in pod.engines)
+    ticks = sum(e.decode_ticks for e in pod.engines)
+    # latency from when the request ARRIVED (the trace stagger is offered
+    # load, not serving latency), not from the bulk submit at tick 0
+    lat = sorted(r.done_tick - max(r.arrival, r.submit_tick) for r in done)
+    out = {
+        "mode": "continuous",
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": wall,
+        "decode_s": dec_s,
+        "prefill_s": pre_s,
+        "decode_ticks": ticks,
+        "decode_tok_per_s": toks / dec_s if dec_s else 0.0,
+        "p50_latency_ticks": lat[len(lat) // 2] if lat else 0,
+        "p99_latency_ticks": lat[min(len(lat) - 1,
+                                     int(0.99 * len(lat)))] if lat else 0,
+        "pod": pod.status(),
+    }
+    print(f"[serve] pod={pod.pod_id} image={pod.image.short_digest} "
+          f"replicas={args.replicas} slots={args.slots}")
+    print(f"[serve] {len(done)} requests, {toks} tokens in {wall:.2f}s "
+          f"(decode {out['decode_tok_per_s']:.0f} tok/s over {ticks} ticks; "
+          f"p50 {out['p50_latency_ticks']} / p99 {out['p99_latency_ticks']} "
+          f"ticks)")
+    return out
+
+
+def serve_static(rt: Runtime, image, args) -> dict:
+    """Fixed-batch baseline THROUGH the container compile path."""
+    from repro.serve.serve_step import greedy_sample
+    c = rt.run(image, platform=args.platform)
+    cfg = c.arch
+    if cfg.frontend:
+        raise NotImplementedError(
+            "serve driver is text-only; frontend-embedding archs are not "
+            "supported (matches the continuous path's SlotEngine check)")
+    B, P, G = args.slots, args.prompt_len, args.gen
+    cache_len = P + G + 1
+    prefill = c.compile_serve_step("prefill", batch=B, prompt_len=P,
+                                   cache_len=cache_len)
+    generate = c.compile_serve_step("generate", batch=B, cache_len=cache_len,
+                                    gen_steps=G)
+    rng = np.random.default_rng(args.seed)
+    gens = _tail_budgets(G, args.requests)
+    params = c.init_params(args.seed)
+
+    toks_useful = 0
+    t_pre = t_dec = 0.0
+    waves = 0
+    t0 = time.perf_counter()
+    for lo in range(0, args.requests, B):
+        wave = gens[lo:lo + B]
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+        t1 = time.perf_counter()
+        last, cache = prefill(params, prompts)
+        jax.block_until_ready(last)
+        t_pre += time.perf_counter() - t1
+        first = greedy_sample(last, cfg.vocab_size)[:, None]
+        t1 = time.perf_counter()
+        # the static batch cannot release a finished slot: it decodes the
+        # full G steps for everyone in the wave
+        toks, _ = generate(params, cache, first, jnp.int32(P))
+        jax.block_until_ready(toks)
+        t_dec += time.perf_counter() - t1
+        # same convention as continuous mode: a budget of g counts g tokens
+        # (the prefill-sampled first token is inside the budget)
+        toks_useful += sum(min(g, G) for g in wave)
+        waves += 1
+    wall = time.perf_counter() - t0
+    out = {
+        "mode": "static",
+        "requests": args.requests,
+        "tokens": toks_useful,
+        "wall_s": wall,
+        "decode_s": t_dec,
+        "prefill_s": t_pre,
+        "decode_ticks": waves * G,
+        "decode_tok_per_s": toks_useful / t_dec if t_dec else 0.0,
+    }
+    print(f"[serve] static baseline: {args.requests} requests in {waves} "
+          f"waves of {B}: {toks_useful} useful tokens, decode "
+          f"{out['decode_tok_per_s']:.0f} tok/s ({t_dec:.2f}s)")
+    return out
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--image", required=True)
     ap.add_argument("--platform", default=None)
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--mode", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=8,
+                    help="KV slots per replica (static: the batch size)")
+    ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--arrive-per-tick", type=int, default=8,
+                    help="staggered arrivals: requests arriving per tick")
+    ap.add_argument("--fairness-cap", type=int, default=8)
     ap.add_argument("--root", default=".stevedore")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     rt = Runtime(args.root)
+    # a registry ref is passed through as a ref so the Pod stays
+    # tag-upgradable (RollingDeployer re-resolves it); an Imagefile is built
     image = (rt.build(Path(args.image).read_text())
-             if Path(args.image).exists() else rt.pull(args.image))
-    c = rt.run(image, platform=args.platform)
-    cfg = c.arch
-    B, P, G = args.requests, args.prompt_len, args.gen
-    print(f"[serve] image={image.short_digest} arch={cfg.name} "
-          f"batch={B} prompt={P} gen={G}")
-
-    params = c.init_params(args.seed)
-    from repro.serve.serve_step import ServeStepBuilder
-    b = ServeStepBuilder(c.model, c.mesh, c.rules)
-    prefill = jax.jit(b.build_prefill(cache_len=P + G + 1))
-    generate = jax.jit(b.build_generate_loop(G))
-
-    rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
-    fe = (jnp.asarray(rng.standard_normal(
-        (B, cfg.frontend_len, cfg.d_model)) * 0.02, jnp.bfloat16)
-        if cfg.frontend else None)
-
-    t0 = time.perf_counter()
-    if fe is not None:
-        last_logits, cache = prefill(params, prompts, fe)
-    else:
-        last_logits, cache = prefill(params, prompts)
-    jax.block_until_ready(last_logits)
-    t_prefill = time.perf_counter() - t0
-
-    first = greedy_sample(last_logits, cfg.vocab_size)[:, None]
-    t0 = time.perf_counter()
-    toks, _ = generate(params, cache, first,
-                       jnp.int32(P + (cfg.frontend_len or 0)))
-    jax.block_until_ready(toks)
-    t_gen = time.perf_counter() - t0
-
-    print(f"[serve] prefill {t_prefill*1e3:.1f} ms "
-          f"({B*P/t_prefill:.0f} tok/s), decode {t_gen*1e3:.1f} ms "
-          f"({B*G/t_gen:.0f} tok/s)")
-    print(f"[serve] sample continuation (req 0): {toks[0, :16].tolist()}")
-    return {"prefill_s": t_prefill, "decode_s": t_gen,
-            "tokens": np.asarray(toks)}
+             if Path(args.image).exists() else args.image)
+    if args.mode == "static":
+        return serve_static(rt, image, args)
+    return serve_continuous(rt, image, args)
 
 
 if __name__ == "__main__":

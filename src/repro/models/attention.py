@@ -287,22 +287,39 @@ def kv_cache_specs(window: int = 0):
 def decode_attn(p: dict, x: jax.Array, layer_cache: dict, idx: jax.Array,
                 cfg: ModelConfig, geom: AttnGeometry, window: int = 0):
     """One-token decode. x: (B,1,D); layer_cache k/v: (B,S,n_kv,hd);
-    idx: scalar current position. Returns (out, new_cache).
+    idx: current position -- a scalar (whole-batch lockstep decode) or a
+    (B,) vector of per-row positions (slot-granular continuous batching:
+    every batch row is an independent request at its own depth).
+    Returns (out, new_cache).
 
     For ``window`` caches the buffer is a ring of size window (positions are
     reconstructed modulo the ring)."""
     B = x.shape[0]
-    positions = jnp.full((B, 1), idx, jnp.int32)
+    per_slot = jnp.ndim(idx) == 1
+    positions = (idx[:, None].astype(jnp.int32) if per_slot
+                 else jnp.full((B, 1), idx, jnp.int32))
     q, k, v = project_qkv(p, x, cfg, geom, positions)
     S = layer_cache["k"].shape[1]
     slot = jnp.mod(idx, S) if window else idx
-    ck = jax.lax.dynamic_update_slice(layer_cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(layer_cache["v"], v, (0, slot, 0, 0))
+    if per_slot:
+        # per-row writes: vmap the row update so each request lands at its
+        # own position (XLA lowers this to one scatter, not B updates)
+        upd = jax.vmap(
+            lambda buf, new, s: jax.lax.dynamic_update_slice(
+                buf, new, (s, 0, 0)))
+        ck = upd(layer_cache["k"], k, slot)
+        cv = upd(layer_cache["v"], v, slot)
+    else:
+        ck = jax.lax.dynamic_update_slice(layer_cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(layer_cache["v"], v, (0, slot, 0, 0))
     if window:
         # ring buffer: true position of ring slot j given current write pos
         ring_idx = jnp.arange(S)
-        k_pos = idx - jnp.mod(slot - ring_idx, S)
-        k_pos = jnp.broadcast_to(k_pos, (B, S))
+        if per_slot:
+            k_pos = idx[:, None] - jnp.mod(slot[:, None] - ring_idx[None, :], S)
+        else:
+            k_pos = idx - jnp.mod(slot - ring_idx, S)
+            k_pos = jnp.broadcast_to(k_pos, (B, S))
     else:
         k_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
     ctx = attend(q, ck, cv, positions, k_pos, window,

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.dist.compat import shard_map as _shard_map
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_mlp, mlp_defs
 from repro.models.params import ParamDef
@@ -150,12 +151,14 @@ def moe_param_specs(cfg: ModelConfig, model_axis: str = "model") -> dict:
 
 
 def _moe_local(p: dict, x: jax.Array, cfg: ModelConfig, model_axis: str,
-               batch_axes: tuple[str, ...]):
-    """Per-device body. x: (B_local, S, D) -- batch already data-local."""
+               batch_axes: tuple[str, ...], tp: int):
+    """Per-device body. x: (B_local, S, D) -- batch already data-local.
+
+    ``tp`` is the static model-axis size (from the mesh; lax.axis_size is
+    not available on every supported jax)."""
     Bl, S, D = x.shape
     T = Bl * S
     E, k = cfg.n_experts, cfg.top_k
-    tp = jax.lax.axis_size(model_axis)
     el = E // tp
     off = jax.lax.axis_index(model_axis) * el
     C = capacity(cfg, T)                                   # per data shard
@@ -226,8 +229,8 @@ def moe_forward_spmd(p: dict, x: jax.Array, cfg: ModelConfig, mesh: Mesh,
     manual = set(baxes) | {model_axis}
     pspecs = moe_param_specs(cfg, model_axis)
     xspec = (P(baxes if len(baxes) > 1 else baxes[0]) if baxes else P())
-    fn = jax.shard_map(
-        lambda pl, xl: _moe_local(pl, xl, cfg, model_axis, baxes),
+    fn = _shard_map(
+        lambda pl, xl: _moe_local(pl, xl, cfg, model_axis, baxes, tp),
         mesh=mesh,
         in_specs=(pspecs, xspec),
         out_specs=(xspec, P()),

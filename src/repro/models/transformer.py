@@ -319,7 +319,9 @@ class Model:
     # -- decode ------------------------------------------------------------
     def decode_step(self, params: dict, cache: dict, tokens: jax.Array,
                     idx: jax.Array):
-        """tokens: (B,1); idx: scalar int32 position. -> (logits, new_cache).
+        """tokens: (B,1); idx: int32 position -- scalar (lockstep batch) or
+        (B,) per-row positions (slot-granular continuous batching).
+        -> (logits, new_cache).
 
         The cache rides in the scan CARRY and is updated in place with
         dynamic_update_index (params are dynamically indexed per layer).

@@ -1,0 +1,24 @@
+"""Pod orchestrator: continuous-batching serving fleets over Containers.
+
+The layer the paper's trajectory points at (Hale et al. run one container
+well; Benedicic et al. run fleets of them): a ``Pod`` of N Container
+replicas of one image, a FIFO ``RequestQueue``, a ``ContinuousScheduler``
+doing iteration-level (Orca-style) batching over per-request KV-cache
+slots, and a ``RollingDeployer`` that re-resolves a registry tag and
+blue/green-rolls the fleet with drains -- warm-started through the shared
+CompileCache.
+"""
+
+from repro.orchestrator.deployer import RollingDeployer
+from repro.orchestrator.pod import Pod
+from repro.orchestrator.request_queue import GenRequest, RequestQueue
+from repro.orchestrator.scheduler import ContinuousScheduler, SlotEngine
+
+__all__ = [
+    "GenRequest",
+    "RequestQueue",
+    "Pod",
+    "SlotEngine",
+    "ContinuousScheduler",
+    "RollingDeployer",
+]

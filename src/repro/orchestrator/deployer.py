@@ -1,0 +1,65 @@
+"""Rolling blue/green upgrades: re-resolve a tag, drain, swap.
+
+The serving analog of the paper's mutable-tag workflow (§3.4: ``stable`` /
+``2016.1.0r1`` pointers over immutable digests): a fleet runs whatever
+digest its tag resolved to at bring-up; releasing means re-pointing the tag
+and rolling the fleet. Per replica, the deployer
+
+  1. builds the GREEN engine from the newly-resolved image first -- its
+     compile goes through the shared CompileCache, so identical lowered
+     steps (same shapes/mesh) warm-start and the replica is ready to serve
+     the moment it is swapped in (the import-problem fix applied to
+     rollover);
+  2. marks the BLUE engine draining: no new admissions, in-flight requests
+     decode to completion while the rest of the pod keeps serving;
+  3. swaps GREEN into the pod and retires BLUE.
+
+Capacity never drops below N-1 replicas and in-flight requests are never
+killed -- the invariants the orchestrator tests pin down.
+"""
+
+from __future__ import annotations
+
+from repro.orchestrator.pod import Pod
+from repro.orchestrator.scheduler import ContinuousScheduler
+
+
+class RollingDeployer:
+    def __init__(self, pod: Pod, scheduler: ContinuousScheduler):
+        self.pod = pod
+        self.scheduler = scheduler
+
+    def upgrade(self, ref: str | None = None) -> dict:
+        """Roll the pod onto whatever ``ref`` (default: the pod's own tag)
+        resolves to now. No-op if the digest is unchanged."""
+        ref = ref or self.pod.ref
+        if ref is None:
+            raise ValueError("pod was built from a raw image; pass a ref")
+        new_digest = self.pod.runtime.registry.resolve(ref)
+        old_digest = self.pod.image.digest
+        report = {"ref": ref, "from": old_digest[:12], "to": new_digest[:12],
+                  "changed": new_digest != old_digest, "replicas": []}
+        if not report["changed"]:
+            return report
+
+        new_image = self.pod.runtime.pull(ref)
+        for i in range(len(self.pod.engines)):
+            blue = self.pod.engines[i]
+            green = self.pod.make_engine(new_image, i)   # compile before drain
+            in_flight = len(blue.active)
+            drain_ticks = self.scheduler.drain(blue)
+            blue.release()          # free the blue generation's device state
+            self.pod.engines[i] = green
+            self.pod.retired.append(blue)
+            report["replicas"].append({
+                "replica": i,
+                "in_flight_at_drain": in_flight,
+                "drain_ticks": drain_ticks,
+                "container_old": blue.container.container_id,
+                "container_new": green.container.container_id,
+            })
+        self.pod.image = new_image
+        self.pod.ref = ref
+        self.pod.drop_params(old_digest)   # last blue gone; free its params
+        self.pod.write_state()
+        return report

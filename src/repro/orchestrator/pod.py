@@ -1,0 +1,107 @@
+"""Pod: N Container replicas of one immutable EnvImage, served as a unit.
+
+The kubernetes/docker-compose analog over the repo's docker analog: a Pod
+resolves a Registry ref ONCE (so every replica runs the identical image
+digest, the paper's reproducibility contract), runs one Container per
+replica, and gives each a SlotEngine. Replicas share the Runtime's
+CompileCache, so replica 0 pays the trace+lower+compile cost and replicas
+1..N-1 deserialize the executable -- the paper's import-problem fix applied
+to fleet bring-up.
+
+Pod state is persisted under ``<runtime root>/pods/<pod_id>.json`` so
+``repro ps`` can show serving fleets next to containers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import uuid
+from pathlib import Path
+
+from repro.core.image import EnvImage
+from repro.orchestrator.scheduler import SlotEngine
+
+
+class Pod:
+    def __init__(self, runtime, ref, *, replicas: int = 2, n_slots: int = 4,
+                 max_len: int = 256, platform: str | None = None,
+                 seed: int = 0, eos_id: int | None = None,
+                 decode_chunk: int = 4):
+        if replicas < 1:
+            raise ValueError("a Pod needs at least one replica")
+        self.runtime = runtime
+        self.ref = ref if isinstance(ref, str) else None
+        self.image: EnvImage = (ref if isinstance(ref, EnvImage)
+                                else runtime.pull(ref))
+        self.platform = platform
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.seed = int(seed)
+        self.eos_id = eos_id
+        self.decode_chunk = int(decode_chunk)
+        self.pod_id = f"pod-{uuid.uuid4().hex[:8]}"
+        self._params: dict[str, object] = {}   # image digest -> shared tree
+        self.engines: list[SlotEngine] = [
+            self.make_engine(self.image, i) for i in range(replicas)]
+        self.retired: list[SlotEngine] = []
+        self.write_state()
+
+    def make_engine(self, image: EnvImage, index: int) -> SlotEngine:
+        """One replica: container + slot engine over SHARED params.
+
+        One logical checkpoint served N ways: the params tree is
+        materialized once per image generation and shared by every replica
+        (engines never mutate it), and the compiled steps come warm out of
+        the shared CompileCache after the first replica."""
+        c = self.runtime.run(image, platform=self.platform)
+        params = self._params.get(image.digest)
+        if params is None:
+            params = self._params[image.digest] = c.init_params(self.seed)
+        return SlotEngine(c, params, n_slots=self.n_slots,
+                          max_len=self.max_len, eos_id=self.eos_id,
+                          name=f"{self.pod_id}/r{index}",
+                          decode_chunk=self.decode_chunk)
+
+    def drop_params(self, image_digest: str) -> None:
+        """Release a retired generation's shared params (deployer calls
+        this after the last blue replica of that image is swapped out)."""
+        self._params.pop(image_digest, None)
+
+    # -- capacity -----------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return sum(e.n_slots for e in self.engines)
+
+    @property
+    def free_slots(self) -> int:
+        return sum(len(e.free) for e in self.engines if e.has_free())
+
+    # -- state --------------------------------------------------------------
+    def status(self) -> dict:
+        return {
+            "pod": self.pod_id,
+            "ref": self.ref,
+            "image": self.image.short_digest,
+            "capacity": self.capacity,
+            "phase": ("serving" if any(e.active for e in self.engines)
+                      else "idle"),
+            "pid": os.getpid(),     # lets `ps` tell live fleets from dead
+            "replicas": [e.status() for e in self.engines],
+        }
+
+    def write_state(self, final: bool = False) -> Path:
+        """Persist status; ``final=True`` stamps a terminal phase so ``ps``
+        never misreports the pod after OS pid reuse."""
+        d = Path(self.runtime.root) / "pods"
+        d.mkdir(parents=True, exist_ok=True)
+        p = d / f"{self.pod_id}.json"
+        status = self.status()
+        if final:
+            status["phase"] = "exited"
+        # atomic: state refreshes every scheduler tick and a concurrent
+        # `repro ps` must never see a half-written file
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(json.dumps(status, indent=2))
+        os.replace(tmp, p)
+        return p

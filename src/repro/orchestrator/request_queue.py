@@ -1,0 +1,86 @@
+"""Request admission: FIFO queue with arrival times and a fairness cap.
+
+``GenRequest`` is one generation job (prompt + decode budget). The queue
+admits strictly in submission order (FIFO) among requests that have
+*arrived* (``arrival`` is a tick stamp, letting benchmarks replay staggered
+traffic deterministically). The scheduler bounds admissions per tick
+(``fairness_cap``) so a burst of new prompts cannot stall in-flight decode
+indefinitely -- the classic continuous-batching prefill/decode interleave.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class GenRequest:
+    rid: int
+    prompt: np.ndarray                  # (P,) int32 token ids
+    max_new_tokens: int
+    eos_id: int | None = None
+    arrival: int = 0                    # earliest admission tick
+
+    # -- runtime state (owned by the scheduler/engine) ----------------------
+    state: str = "queued"               # queued | running | done
+    tokens: list[int] = field(default_factory=list)  # generated ids
+    submit_tick: int = -1
+    admit_tick: int = -1
+    done_tick: int = -1
+    replica: str | None = None
+    slot: int | None = None
+    finish_reason: str | None = None    # eos | length
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+        if self.prompt.ndim != 1 or self.prompt.size == 0:
+            raise ValueError(f"request {self.rid}: prompt must be 1-D, non-empty")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+
+class RequestQueue:
+    """FIFO admission queue. ``pop_ready`` preserves submission order among
+    arrived requests; not-yet-arrived requests block those behind them only
+    until their arrival tick (the queue is a trace replayer, not a
+    reorderer)."""
+
+    def __init__(self):
+        self._q: deque[GenRequest] = deque()
+        self.submitted = 0
+        self.admitted = 0
+
+    def submit(self, req: GenRequest, tick: int = 0) -> None:
+        if req.state != "queued":
+            raise ValueError(f"request {req.rid} already {req.state}")
+        req.submit_tick = tick
+        self._q.append(req)
+        self.submitted += 1
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def pending(self) -> int:
+        return len(self._q)
+
+    def has_ready(self, tick: int) -> bool:
+        return bool(self._q) and self._q[0].arrival <= tick
+
+    def pop_ready(self, tick: int) -> GenRequest | None:
+        """Next request in FIFO order, or None if the head has not arrived."""
+        if not self.has_ready(tick):
+            return None
+        self.admitted += 1
+        return self._q.popleft()

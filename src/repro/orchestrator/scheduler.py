@@ -1,0 +1,308 @@
+"""Continuous batching: slot engines + the interleaved prefill/decode loop.
+
+``SlotEngine`` owns one Container replica's serving state: a bank of
+``n_slots`` KV-cache slots (one in-flight request per slot, free slots on a
+free-list), compiled prefill/decode executables (via the Container's
+CompileCache -- replicas after the first warm-start), and per-slot host
+bookkeeping (position, last token, owning request).
+
+``ContinuousScheduler`` drives a Pod of engines: each global *tick* first
+admits queued requests FIFO into free slots (bounded by ``fairness_cap``
+prefills per tick so admission never starves decode), then runs ONE decode
+step per engine in which every active slot advances by one token at its own
+depth. Requests exit early on EOS or their token budget; their slot returns
+to the free-list the same tick and can be refilled on the next -- the
+Orca-style iteration-level scheduling loop.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.orchestrator.request_queue import GenRequest, RequestQueue
+
+_PREFILL_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
+
+
+def _insert_slot(big, small, slot):
+    """Write one request's (batch=1) cache into row ``slot`` of the bank."""
+    def leaf(b, s):
+        starts = (jnp.int32(0), slot) + (jnp.int32(0),) * (b.ndim - 2)
+        return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), starts)
+    return jax.tree.map(leaf, big, small)
+
+
+# jitted ONCE at module level: jax's trace cache keys on function identity,
+# so a per-engine jit wrapper would re-trace the full-cache update for every
+# replica and every blue/green rollover
+_insert_slot_jit = jax.jit(_insert_slot, donate_argnums=0)
+
+
+class SlotEngine:
+    def __init__(self, container, params, *, n_slots: int, max_len: int,
+                 eos_id: int | None = None, name: str | None = None,
+                 decode_chunk: int = 4):
+        if container.arch.frontend:
+            raise NotImplementedError(
+                "slot serving does not support frontend-embedding archs")
+        self.container = container
+        self.params = params
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.eos_id = eos_id
+        self.name = name or container.container_id
+        self.chunk = max(1, int(decode_chunk))
+
+        # ring-buffer (windowed) and recurrent caches are not right-pad safe
+        # (see ServeStepBuilder.build_prefill_slot): use exact-length prefill
+        kinds = {k for st in container.model.stages for k in st.unit}
+        cfg = container.arch
+        self.exact_prefill = bool(
+            kinds & {"ssm", "rec", "local"}
+            or (cfg.window and cfg.attn_kind == "local"))
+
+        if self.chunk == 1:
+            # single-tick primitive: same semantics, no scan wrapper
+            one = container.compile_serve_step(
+                "decode_slots", batch=self.n_slots, cache_len=self.max_len)
+
+            def decode(params, cache, toks, pos):
+                nxt, cache = one(params, cache, toks, pos)
+                return nxt[:, None], nxt[:, None], pos + 1, cache
+
+            self.decode = decode
+        else:
+            self.decode = container.compile_serve_step(
+                "decode_chunk", batch=self.n_slots, cache_len=self.max_len,
+                gen_steps=self.chunk)
+        self._prefills: dict[int, object] = {}      # bucket len -> executable
+        self._insert = _insert_slot_jit
+
+        self.cache = container.init_slot_cache(self.n_slots, self.max_len)
+        self.pos = np.zeros(self.n_slots, np.int32)
+        self.cur_tok = np.zeros(self.n_slots, np.int32)
+        self.free: list[int] = list(range(self.n_slots))
+        self.active: dict[int, GenRequest] = {}
+        self.draining = False
+        self.stopped = False
+
+        # accounting (for ps/status + the fig6 benchmark)
+        self.slots_allocated = 0
+        self.slots_freed = 0
+        self.decode_ticks = 0
+        self.tokens_generated = 0
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+
+    # -- admission ----------------------------------------------------------
+    def has_free(self) -> bool:
+        return bool(self.free) and not (self.draining or self.stopped)
+
+    def bucket(self, prompt_len: int) -> int:
+        if self.exact_prefill:
+            return prompt_len
+        for b in _PREFILL_BUCKETS:
+            if b >= prompt_len:
+                return min(b, self.max_len)
+        return prompt_len
+
+    def start(self, req: GenRequest, tick: int) -> bool:
+        """Prefill ``req`` into a free slot. Returns True if the request
+        already finished at prefill (budget of one token, or instant EOS)."""
+        # chunked decode can overshoot a finished request by chunk-1 writes;
+        # the scheduler pre-screens, so tripping this is an internal bug
+        if req.total_len + self.chunk > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+gen {req.total_len} exceeds "
+                f"slot capacity {self.max_len - self.chunk}")
+        slot = self.free.pop(0)
+        self.slots_allocated += 1
+        req.slot, req.replica, req.state = slot, self.name, "running"
+        req.admit_tick = tick
+
+        P = req.prompt_len
+        bucket = self.bucket(P)
+        prefill = self._prefills.get(bucket)
+        if prefill is None:
+            prefill = self.container.compile_serve_step(
+                "prefill_slot", prompt_len=bucket, cache_len=self.max_len)
+            self._prefills[bucket] = prefill
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :P] = req.prompt
+
+        t0 = time.perf_counter()
+        first, small = prefill(self.params, jnp.asarray(toks), jnp.int32(P))
+        self.cache = self._insert(self.cache, small, jnp.int32(slot))
+        first = int(jax.block_until_ready(first)[0])
+        self.prefill_s += time.perf_counter() - t0
+
+        req.tokens.append(first)
+        self.tokens_generated += 1
+        self.pos[slot] = P                  # next decode writes position P
+        self.cur_tok[slot] = first
+        self.active[slot] = req
+        if self._finished(req, first):
+            self._complete(req, tick)
+            return True
+        return False
+
+    # -- decode -------------------------------------------------------------
+    def tick(self, tick: int) -> list[GenRequest]:
+        """One decode *chunk* (``self.chunk`` model ticks in one dispatch)
+        over the whole slot bank; returns requests that completed. A slot
+        finishing mid-chunk decodes to the chunk boundary; its surplus
+        tokens are discarded here (bounded, counted waste)."""
+        if not self.active:
+            return []
+        t0 = time.perf_counter()
+        toks, _, _, self.cache = self.decode(
+            self.params, self.cache,
+            jnp.asarray(self.cur_tok[:, None]), jnp.asarray(self.pos))
+        toks = np.asarray(jax.block_until_ready(toks))   # (n_slots, chunk)
+        self.decode_s += time.perf_counter() - t0
+        self.decode_ticks += self.chunk
+
+        finished = []
+        self.pos += self.chunk          # free slots ride along harmlessly
+        for slot, req in list(self.active.items()):
+            self.cur_tok[slot] = int(toks[slot, -1])
+            for k in range(self.chunk):
+                tok = int(toks[slot, k])
+                req.tokens.append(tok)
+                self.tokens_generated += 1
+                if self._finished(req, tok):
+                    self._complete(req, tick)
+                    finished.append(req)
+                    break
+        return finished
+
+    def _finished(self, req: GenRequest, tok: int) -> bool:
+        eos = req.eos_id if req.eos_id is not None else self.eos_id
+        if eos is not None and tok == eos:
+            req.finish_reason = "eos"
+            return True
+        if len(req.tokens) >= req.max_new_tokens:
+            req.finish_reason = "length"
+            return True
+        return False
+
+    def _complete(self, req: GenRequest, tick: int) -> None:
+        req.state, req.done_tick = "done", tick
+        self.active.pop(req.slot)
+        self.free.append(req.slot)
+        self.slots_freed += 1
+
+    def release(self) -> None:
+        """Drop device state (params, slot cache, executables). Called at
+        retirement so upgraded-away fleets do not pin a whole generation of
+        params+KV in device memory."""
+        self.stopped = True
+        self.params = None
+        self.cache = None
+        self.decode = None
+        self._prefills.clear()
+
+    def status(self) -> dict:
+        return {
+            "container": self.container.container_id,
+            "image": self.container.image.short_digest,
+            "slots": self.n_slots,
+            "active": len(self.active),
+            "free": len(self.free),
+            "draining": self.draining,
+            "stopped": self.stopped,
+            "decode_ticks": self.decode_ticks,
+            "tokens_generated": self.tokens_generated,
+        }
+
+
+class ContinuousScheduler:
+    """Iteration-level scheduling over a Pod's engines."""
+
+    STATE_EVERY = 8     # min ticks between pod-state file refreshes
+
+    def __init__(self, pod, queue: RequestQueue | None = None,
+                 fairness_cap: int = 4):
+        self.pod = pod
+        self.queue = queue or RequestQueue()
+        self.fairness_cap = int(fairness_cap)
+        self.tick = 0
+        self._state_tick = -self.STATE_EVERY
+        self.completed: list[GenRequest] = []
+        self.rejected: list[GenRequest] = []
+        self.admission_order: list[int] = []
+
+    def submit(self, reqs: Iterable[GenRequest] | GenRequest) -> None:
+        if isinstance(reqs, GenRequest):
+            reqs = [reqs]
+        for r in reqs:
+            self.queue.submit(r, self.tick)
+
+    # -- one global tick ------------------------------------------------------
+    def step(self) -> list[GenRequest]:
+        done: list[GenRequest] = []
+        # admission: FIFO across the pod, capped prefills per tick
+        admitted = 0
+        while admitted < self.fairness_cap and self.queue.has_ready(self.tick):
+            engines = [e for e in self.pod.engines if e.has_free()]
+            if not engines:
+                break
+            # least-loaded engine keeps replica occupancy balanced without
+            # breaking FIFO (the *request* order is still queue order)
+            eng = min(engines, key=lambda e: len(e.active))
+            req = self.queue.pop_ready(self.tick)
+            if req.total_len + eng.chunk > eng.max_len:
+                # reject the one request; never crash a serving fleet
+                req.state, req.finish_reason = "rejected", "oversized"
+                req.done_tick = self.tick
+                self.rejected.append(req)
+                continue
+            self.admission_order.append(req.rid)
+            if eng.start(req, self.tick):
+                done.append(req)
+            admitted += 1
+        # decode: every engine advances its active slots by one token
+        for eng in self.pod.engines:
+            done.extend(eng.tick(self.tick))
+        self.completed.extend(done)
+        self.tick += 1
+        # keep `repro ps` honest without putting file I/O in every tick:
+        # refresh on occupancy changes, at most once per STATE_EVERY ticks
+        if (admitted or done) and (
+                self.tick - self._state_tick >= self.STATE_EVERY):
+            self.pod.write_state()
+            self._state_tick = self.tick
+        return done
+
+    @property
+    def busy(self) -> bool:
+        return (self.queue.pending > 0
+                or any(e.active for e in self.pod.engines))
+
+    def run(self, max_ticks: int | None = None) -> list[GenRequest]:
+        """Serve until queue + slots are empty (or ``max_ticks``)."""
+        start = self.tick
+        while self.busy:
+            if max_ticks is not None and self.tick - start >= max_ticks:
+                break
+            self.step()
+        self.pod.write_state()      # final snapshot (throttle may have skipped)
+        return self.completed
+
+    def drain(self, engine: SlotEngine, max_ticks: int = 100_000) -> int:
+        """Tick the pod until ``engine`` has no in-flight requests. The
+        engine is marked draining (no new admissions) but its active
+        requests run to completion; other engines keep serving."""
+        engine.draining = True
+        start = self.tick
+        while engine.active and self.tick - start < max_ticks:
+            self.step()
+        if engine.active:
+            raise RuntimeError(
+                f"drain of {engine.name} did not converge in {max_ticks} ticks")
+        return self.tick - start

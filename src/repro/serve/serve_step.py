@@ -1,7 +1,16 @@
-"""Serving steps: batched prefill and single-token decode.
+"""Serving steps: batched prefill, single-token decode, and the
+slot-granular variants that power the orchestrator's continuous batching.
 
-``prefill``: (params, tokens[, frontend_embeds]) -> (last_logits, cache)
-``decode`` : (params, cache, tokens (B,1), idx)  -> (logits, new_cache)
+``prefill``      : (params, tokens[, frontend_embeds]) -> (last_logits, cache)
+``decode``       : (params, cache, tokens (B,1), idx)  -> (logits, new_cache)
+``prefill_slot`` : (params, tokens (1,P), length)      -> (first_tok, cache)
+``decode_slots`` : (params, cache, tokens (B,1), pos (B,))
+                                                -> (next_tokens (B,), cache)
+
+The slot variants treat the batch dimension as a bank of independent
+*KV-cache slots*: each row is one in-flight request at its own depth
+(``pos`` per row), so requests of different lengths decode in lockstep and
+a finished slot can be refilled without touching its neighbours.
 
 Sampling masks physically-padded vocab columns (models pad the vocab to a
 lane/TP multiple -- see models/layers.padded_vocab) so padded ids can never
@@ -50,6 +59,71 @@ class ServeStepBuilder:
             return logits[:, -1], new_cache
 
         return decode
+
+    def build_prefill_slot(self, cache_len: int) -> Callable:
+        """Prefill ONE request whose prompt is right-padded to a bucket.
+
+        tokens: (1, P_bucket); length: scalar int32 count of real tokens.
+        Returns (first_token (1,), cache padded to ``cache_len``).
+
+        Right padding is causally safe for full attention: pad-position K/V
+        land at positions >= length, which the causal mask hides until the
+        decode loop overwrites them in place. (Ring-buffer and recurrent
+        caches are NOT pad-safe -- callers use exact-length buckets there;
+        see orchestrator.scheduler.SlotEngine.)
+        """
+        vocab = self.model.cfg.vocab_size
+
+        def prefill_slot(params, tokens, length):
+            logits, cache, _ = self.model.forward(
+                params, tokens, collect_cache=True, cache_len=cache_len)
+            last = jnp.take_along_axis(
+                logits, (length - 1)[None, None, None], axis=1)[:, 0]
+            return greedy_sample(last, vocab), cache
+
+        return prefill_slot
+
+    def build_decode_slots(self) -> Callable:
+        """One decode tick over a slot bank: every row advances by one token
+        at its own position. Free slots decode garbage into their own rows,
+        which the next insertion overwrites -- no masking needed in-kernel.
+        """
+        decode = self.build_decode()
+        vocab = self.model.cfg.vocab_size
+
+        def decode_slots(params, cache, tokens, pos):
+            logits, new_cache = decode(params, cache, tokens, pos)
+            return greedy_sample(logits, vocab), new_cache
+
+        return decode_slots
+
+    def build_decode_chunk(self, n_steps: int) -> Callable:
+        """Multi-step slot decode: ``n_steps`` ticks in ONE dispatch.
+
+        Amortizes per-dispatch host overhead (pytree flatten, executable
+        call, token sync) over ``n_steps`` decode ticks -- the multi-step
+        scheduling trick. Slots that finish mid-chunk keep decoding until
+        the chunk boundary; the host discards their surplus tokens (bounded
+        waste of ``n_steps - 1`` positions, accounted by the scheduler).
+
+        (params, cache, tokens (B,1), pos (B,)) ->
+            (toks (B, n_steps), next_tokens (B,1), pos+n_steps, cache)
+        """
+        decode = self.build_decode()
+        vocab = self.model.cfg.vocab_size
+
+        def decode_chunk(params, cache, tokens, pos):
+            def body(carry, _):
+                cache, tok, pos = carry
+                logits, cache = decode(params, cache, tok, pos)
+                nxt = greedy_sample(logits, vocab)[:, None]
+                return (cache, nxt, pos + 1), nxt[:, 0]
+
+            (cache, tok, pos), toks = jax.lax.scan(
+                body, (cache, tokens, pos), None, length=n_steps)
+            return jnp.moveaxis(toks, 0, 1), tok, pos, cache
+
+        return decode_chunk
 
     def build_generate_loop(self, n_steps: int) -> Callable:
         """Greedy autoregressive loop (used by examples + integration tests)."""

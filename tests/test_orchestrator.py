@@ -1,0 +1,237 @@
+"""Orchestrator invariants: slot hygiene, FIFO admission, decode parity
+with the lockstep path, EOS early exit, and rolling-upgrade drains."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.runtime import Runtime
+from repro.orchestrator import (
+    ContinuousScheduler,
+    GenRequest,
+    Pod,
+    RequestQueue,
+    RollingDeployer,
+)
+
+IMAGEFILE = """
+FROM scratch
+ARCH llama3.2-3b-smoke
+SHAPE decode_32k seq_len=64 global_batch=4
+MESH local
+PRECISION compute=float32 params=float32
+COLLECTIVES generic
+"""
+
+
+@pytest.fixture(scope="module")
+def rt(tmp_path_factory):
+    rt = Runtime(tmp_path_factory.mktemp("stevedore"))
+    rt.build(IMAGEFILE, tag="stable")
+    return rt
+
+
+@pytest.fixture(scope="module")
+def pod(rt):
+    return Pod(rt, "stable", replicas=2, n_slots=3, max_len=56)
+
+
+def _requests(rng, n, *, base_rid=0, arrive_per_tick=4, max_gen=10):
+    return [
+        GenRequest(rid=base_rid + i,
+                   prompt=rng.integers(0, 256, int(rng.integers(3, 18))),
+                   max_new_tokens=int(rng.integers(2, max_gen)),
+                   arrival=i // arrive_per_tick)
+        for i in range(n)
+    ]
+
+
+def test_no_slot_leaks_mixed_lengths(pod):
+    """After a full trace of mixed prompt/gen lengths completes, every slot
+    is back on the free-list and alloc/free counters balance."""
+    sched = ContinuousScheduler(pod, fairness_cap=3)
+    reqs = _requests(np.random.default_rng(0), 20)
+    sched.submit(reqs)
+    sched.run(max_ticks=5000)
+    assert all(r.state == "done" for r in reqs)
+    for e in pod.engines:
+        assert not e.active
+        assert sorted(e.free) == list(range(e.n_slots))
+        assert e.slots_allocated == e.slots_freed
+    # every request got exactly its budget (no EOS configured)
+    for r in reqs:
+        assert len(r.tokens) == r.max_new_tokens
+        assert r.finish_reason == "length"
+
+
+def test_fifo_admission_order_preserved(pod):
+    """Admission order == submission order, even with mixed prompt lengths
+    across two replicas (least-loaded placement must not reorder)."""
+    sched = ContinuousScheduler(pod, fairness_cap=2)
+    reqs = _requests(np.random.default_rng(1), 16, base_rid=100,
+                     arrive_per_tick=16)
+    sched.submit(reqs)
+    sched.run(max_ticks=5000)
+    assert sched.admission_order == [r.rid for r in reqs]
+    admits = [r.admit_tick for r in reqs]
+    assert admits == sorted(admits)
+
+
+@pytest.mark.parametrize("arch", [
+    "llama3.2-3b-smoke",        # full attention (pow2 prefill buckets)
+    "recurrentgemma-2b-smoke",  # rec + windowed-attn ring cache (exact prefill)
+    "mamba2-2.7b-smoke",        # pure SSM state cache (exact prefill)
+])
+def test_slot_decode_matches_lockstep_generate(rt, arch):
+    """Continuous (slot-granular, chunked) decode must reproduce the
+    lockstep prefill+scan pipeline token-for-token on an identical batch --
+    across attention, ring-buffer window, and recurrent cache kinds."""
+    from repro.serve.serve_step import ServeStepBuilder, greedy_sample
+    tag = f"par-{arch}"
+    rt.build(IMAGEFILE.replace("llama3.2-3b-smoke", arch), tag=tag)
+    pod = Pod(rt, tag, replicas=1, n_slots=4, max_len=56)
+    eng = pod.engines[0]
+    c, params = eng.container, eng.params
+    cfg = c.arch
+    B, P, G = 4, 8, 6
+    rng = np.random.default_rng(2)
+    prompts = np.asarray(rng.integers(0, cfg.vocab_size, (B, P)), np.int32)
+
+    b = ServeStepBuilder(c.model, c.mesh, c.rules)
+    last, cache = jax.jit(b.build_prefill(56))(params, jnp.asarray(prompts))
+    first = greedy_sample(last, cfg.vocab_size)[:, None]
+    ref_toks, _ = jax.jit(b.build_generate_loop(G - 1))(
+        params, cache, first, jnp.int32(P))
+    ref = np.concatenate([np.asarray(first), np.asarray(ref_toks)], axis=1)
+
+    sched = ContinuousScheduler(pod, fairness_cap=4)
+    reqs = [GenRequest(rid=i, prompt=prompts[i], max_new_tokens=G)
+            for i in range(B)]
+    sched.submit(reqs)
+    sched.run(max_ticks=1000)
+    got = np.asarray([r.tokens for r in reqs])
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_decode_chunk1_matches_chunk4(rt):
+    """The single-tick decode_slots path (chunk=1) and the scanned
+    decode_chunk path produce identical tokens for the same trace."""
+    outs = []
+    for chunk in (1, 4):
+        pod = Pod(rt, "stable", replicas=1, n_slots=2, max_len=56,
+                  decode_chunk=chunk)
+        sched = ContinuousScheduler(pod)
+        reqs = [GenRequest(rid=i, prompt=np.arange(1, 7) * (i + 1) % 250,
+                           max_new_tokens=6) for i in range(3)]
+        sched.submit(reqs)
+        sched.run(max_ticks=1000)
+        outs.append([r.tokens for r in reqs])
+    assert outs[0] == outs[1]
+
+
+def test_eos_frees_slot_early(rt):
+    """A request hitting EOS stops before its budget and releases its slot."""
+    pod = Pod(rt, "stable", replicas=1, n_slots=2, max_len=56)
+    eng = pod.engines[0]
+    # discover what token the model actually emits, then use it as EOS
+    probe = GenRequest(rid=0, prompt=np.arange(5), max_new_tokens=8)
+    sched = ContinuousScheduler(pod)
+    sched.submit(probe)
+    sched.run(max_ticks=100)
+    eos = probe.tokens[2]
+    hit = GenRequest(rid=1, prompt=np.arange(5), max_new_tokens=40,
+                     eos_id=eos)
+    sched.submit(hit)
+    sched.run(max_ticks=1000)
+    assert hit.finish_reason == "eos"
+    assert len(hit.tokens) < 40
+    assert hit.tokens[-1] == eos
+    assert sorted(eng.free) == list(range(eng.n_slots))
+
+
+def test_rolling_upgrade_drains_in_flight(rt):
+    """Re-tag -> upgrade swaps every replica to the new image digest, and
+    in-flight requests complete (full budget, never killed) before their
+    replica is swapped."""
+    pod = Pod(rt, "stable", replicas=2, n_slots=2, max_len=56)
+    sched = ContinuousScheduler(pod, fairness_cap=4)
+    old_digest = pod.image.digest
+    old_containers = {e.container.container_id for e in pod.engines}
+
+    reqs = [GenRequest(rid=i, prompt=np.arange(4), max_new_tokens=30)
+            for i in range(4)]
+    sched.submit(reqs)
+    sched.step()                      # admit; requests now in flight
+    in_flight = sum(len(e.active) for e in pod.engines)
+    assert in_flight == 4
+
+    rt.build(IMAGEFILE + "LABEL release=r2\n", tag="stable")
+    report = RollingDeployer(pod, sched).upgrade()
+    assert report["changed"]
+    # every replica drained its in-flight work before being swapped
+    for rec in report["replicas"]:
+        assert rec["container_old"] in old_containers
+    for e in pod.engines:
+        assert e.container.image.digest != old_digest
+        assert e.container.image.digest == pod.image.digest
+        assert not e.stopped and not e.draining
+    for old in pod.retired:
+        assert old.stopped and not old.active
+    # drained requests ran to completion, not cancellation
+    for r in reqs:
+        assert r.state == "done"
+        assert len(r.tokens) == 30
+    # the same scheduler keeps serving on the new fleet
+    post = [GenRequest(rid=100 + i, prompt=np.arange(4), max_new_tokens=5)
+            for i in range(3)]
+    sched.submit(post)
+    sched.run(max_ticks=1000)
+    assert all(r.state == "done" for r in post)
+
+
+def test_upgrade_noop_when_digest_unchanged(rt):
+    pod = Pod(rt, "stable", replicas=1, n_slots=2, max_len=56)
+    sched = ContinuousScheduler(pod)
+    engines_before = list(pod.engines)
+    report = RollingDeployer(pod, sched).upgrade()
+    assert not report["changed"]
+    assert pod.engines == engines_before
+
+
+def test_queue_rejects_oversized_and_dup():
+    q = RequestQueue()
+    with pytest.raises(ValueError):
+        GenRequest(rid=0, prompt=np.array([], np.int32), max_new_tokens=4)
+    with pytest.raises(ValueError):
+        GenRequest(rid=0, prompt=np.arange(4), max_new_tokens=0)
+    r = GenRequest(rid=1, prompt=np.arange(4), max_new_tokens=2)
+    q.submit(r)
+    r.state = "running"
+    with pytest.raises(ValueError):
+        q.submit(r)
+
+
+def test_oversized_request_rejected_not_fatal(rt):
+    """One oversized request is rejected; the fleet keeps serving and
+    well-sized requests behind it still complete."""
+    pod = Pod(rt, "stable", replicas=1, n_slots=1, max_len=32)
+    sched = ContinuousScheduler(pod)
+    bad = GenRequest(rid=0, prompt=np.arange(20), max_new_tokens=20)
+    ok = GenRequest(rid=1, prompt=np.arange(6), max_new_tokens=4)
+    sched.submit([bad, ok])
+    sched.run(max_ticks=100)
+    assert bad.state == "rejected" and bad.finish_reason == "oversized"
+    assert sched.rejected == [bad]
+    assert ok.state == "done" and len(ok.tokens) == 4
+    assert sched.admission_order == [1]
+
+
+def test_pod_state_visible_to_ps(rt):
+    pod = Pod(rt, "stable", replicas=1, n_slots=2, max_len=56)
+    state = (rt.root / "pods" / f"{pod.pod_id}.json")
+    assert state.exists()
+    rec = pod.status()
+    assert rec["capacity"] == 2
+    assert rec["replicas"][0]["image"] == pod.image.short_digest
