@@ -20,7 +20,8 @@ def main() -> None:
     args = ap.parse_args()
     names = args.only.split(",") if args.only else [
         "fig2_parity", "fig3_collective_abi", "fig4_import_problem",
-        "fig5_tuned_kernel", "fig6_serving", "roofline_summary",
+        "fig5_tuned_kernel", "fig6_serving", "fig7_paged_kv",
+        "roofline_summary",
     ]
     failed = 0
     for name in names:

@@ -117,6 +117,8 @@ def cmd_serve(rt: Runtime, args) -> int:
             "--arrive-per-tick", str(args.arrive_per_tick)]
     if args.platform:
         argv += ["--platform", args.platform]
+    if args.paged:
+        argv += ["--paged", "--page-size", str(args.page_size)]
     serve_main(argv)
     return 0
 
@@ -170,6 +172,9 @@ def main(argv=None) -> int:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--fairness-cap", type=int, default=8)
     p.add_argument("--arrive-per-tick", type=int, default=8)
+    p.add_argument("--paged", action="store_true",
+                   help="serve from a shared KV page pool (paged attention)")
+    p.add_argument("--page-size", type=int, default=16)
 
     args = ap.parse_args(argv)
     rt = Runtime(args.root)

@@ -311,6 +311,25 @@ class Container:
             lambda s, nsh: jax.device_put(jnp.zeros(s.shape, s.dtype), nsh),
             specs, sh)
 
+    # -- paged serving: global page pool shared by all slots -------------------
+    def paged_cache_specs(self, n_pages: int, page_size: int):
+        """Abstract paged KV pool: per attention layer (n_kv, n_pages,
+        page_size, hd); slots address it through the host PagePool's table."""
+        return self._abstract_cache(
+            self.model.paged_cache_defs(n_pages, page_size, self.cache_dtype))
+
+    def paged_cache_shardings(self, n_pages: int, page_size: int):
+        return self._cache_shardings(
+            self.model.paged_cache_defs(n_pages, page_size, self.cache_dtype))
+
+    def init_paged_cache(self, n_pages: int, page_size: int):
+        """Zero-initialised page pool, placed per the image's shardings."""
+        specs = self.paged_cache_specs(n_pages, page_size)
+        sh = self.paged_cache_shardings(n_pages, page_size)
+        return jax.tree.map(
+            lambda s, nsh: jax.device_put(jnp.zeros(s.shape, s.dtype), nsh),
+            specs, sh)
+
     def _cache_shardings(self, cache_defs):
         from repro.models.params import is_def
         return jax.tree.map(
@@ -326,12 +345,17 @@ class Container:
     def lower_serve_step(self, kind: str, *, batch: int | None = None,
                          prompt_len: int | None = None,
                          cache_len: int | None = None,
-                         gen_steps: int | None = None, donate: bool = True):
+                         gen_steps: int | None = None,
+                         n_pages: int | None = None,
+                         page_size: int | None = None,
+                         max_pages: int | None = None, donate: bool = True):
         """jit + lower a serving step at arbitrary (non-cell) shapes.
 
         kinds: ``prefill`` (B,P -> last_logits+cache), ``prefill_slot``
         (1,P bucket + length -> first token + cache), ``decode_slots``
-        (slot bank, per-row positions), ``generate`` (scanned greedy loop).
+        (slot bank, per-row positions), ``generate`` (scanned greedy loop),
+        plus the ``*_paged`` variants (KV as a global page pool + per-slot
+        page table; see kernels/paged_attention).
         All carry explicit in/out shardings -- replicated-output caches
         would all-gather the full KV (see lower_step NOTE).
         """
@@ -396,6 +420,41 @@ class Container:
                 donate_argnums=(1,) if donate else (),
             )
             return jitted.lower(aparams, cache, toks, pos)
+        if kind == "prefill_slot_paged":
+            fn = b.build_prefill_slot_paged(prompt_len, page_size)
+            np_ = -(-prompt_len // page_size)
+            toks = jax.ShapeDtypeStruct((1, prompt_len), tok)
+            length = jax.ShapeDtypeStruct((), tok)
+            # the page-major small cache reuses the pool defs at np_ pages
+            cache_sh = self._cache_shardings(
+                self.model.paged_cache_defs(np_, page_size, self.cache_dtype))
+            jitted = jax.jit(
+                fn,
+                in_shardings=(pspec, self._batch_sharding(toks.shape), rep),
+                out_shardings=(rep, cache_sh))
+            return jitted.lower(aparams, toks, length)
+        if kind in ("decode_slots_paged", "decode_chunk_paged"):
+            chunked = kind == "decode_chunk_paged"
+            fn = (b.build_decode_chunk_paged(gen_steps) if chunked
+                  else b.build_decode_slots_paged())
+            cache = self.paged_cache_specs(n_pages, page_size)
+            cache_sh = self.paged_cache_shardings(n_pages, page_size)
+            toks = jax.ShapeDtypeStruct((batch, 1), tok)
+            pos = jax.ShapeDtypeStruct((batch,), tok)
+            table = jax.ShapeDtypeStruct((batch, max_pages), tok)
+            tok_sh = self._batch_sharding(toks.shape)
+            pos_sh = self._batch_sharding(pos.shape)
+            table_sh = self._batch_sharding(table.shape)
+            out_sh = ((self._batch_sharding((batch, gen_steps)),
+                       tok_sh, pos_sh, cache_sh) if chunked
+                      else (pos_sh, cache_sh))
+            jitted = jax.jit(
+                fn,
+                in_shardings=(pspec, cache_sh, tok_sh, pos_sh, table_sh),
+                out_shardings=out_sh,
+                donate_argnums=(1,) if donate else (),
+            )
+            return jitted.lower(aparams, cache, toks, pos, table)
         if kind == "generate":
             fn = b.build_generate_loop(gen_steps)
             cache = self._abstract_cache(

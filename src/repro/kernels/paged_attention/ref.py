@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for the paged-attention decode kernel.
+
+Layout contract (shared with kernel.py / ops.py and the PagePool):
+
+  * the KV cache of one layer is a global *page pool*
+    ``k_pages/v_pages: (n_kv, n_pages, page_size, head_dim)`` -- kv heads
+    major so the (page_size, head_dim) minor dims ride the TPU tiling;
+  * each slot owns an ordered list of pages through its page-table row
+    ``page_table: (n_slots, max_pages)`` -- logical position ``p`` of slot
+    ``b`` lives at ``(page_table[b, p // page_size], p % page_size)``;
+  * page 0 is the pool's reserved *garbage page*: unmapped table entries
+    point at it, so gathers/scatters through a free or short slot stay in
+    bounds and the mask (not the allocator) is what hides the junk;
+  * ``lengths[b]`` = number of valid KV positions for slot ``b`` (the
+    decode position + 1: the current token attends to itself).
+
+The mask/softmax arithmetic deliberately mirrors
+``models.attention._sdpa_dense`` (same einsum contractions, same additive
+NEG_INF bias, f32 scores) so the paged decode path reproduces the
+contiguous slot-decode path token-for-token on lockstep batches.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(n_kv, n_pages, ps, hd) + (B, max_pages) -> contiguous (B, L, n_kv, hd)
+    with L = max_pages * ps. Unmapped entries gather the garbage page."""
+    n_kv, _, ps, hd = pages.shape
+    B, mp = page_table.shape
+    g = pages[:, page_table]                   # (n_kv, B, mp, ps, hd)
+    return g.reshape(n_kv, B, mp * ps, hd).transpose(1, 2, 0, 3)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array,
+                        *, window: int = 0,
+                        scale: float | None = None) -> jax.Array:
+    """One decode tick of attention over paged KV.
+
+    q: (B, Hq, hd) -- one query token per slot;
+    k_pages/v_pages: (n_kv, n_pages, page_size, hd);
+    page_table: (B, max_pages) int32; lengths: (B,) int32.
+    Returns (B, Hq, hd).
+    """
+    n_kv, _, ps, hd = k_pages.shape
+    B, Hq, _ = q.shape
+    g = Hq // n_kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    k = gather_pages(k_pages, page_table)          # (B, L, n_kv, hd)
+    v = gather_pages(v_pages, page_table)
+    L = k.shape[1]
+
+    # identical formulation to models.attention._sdpa_dense on a (B,1,..)
+    # query so XLA emits the same reduction order as the contiguous path
+    qg = q.reshape(B, 1, n_kv, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    k_pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    q_pos = (lengths - 1)[:, None].astype(jnp.int32)
+    ok = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        ok &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    s = s + bias[:, None, None]
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)    # (B,1,n_kv,g,hd)
+    return out.reshape(B, Hq, hd).astype(q.dtype)

@@ -53,8 +53,16 @@ def _build_requests(args, cfg, rng):
 def serve_continuous(rt: Runtime, image, args) -> dict:
     from repro.orchestrator import ContinuousScheduler, Pod
     max_len = args.prompt_len + args.gen + 8   # + chunk-overshoot margin
-    pod = Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
-              max_len=max_len, platform=args.platform, seed=args.seed)
+    if getattr(args, "paged", False):
+        # paged: max_len is only the per-request span; double it so long
+        # requests fit, and size the pool to the contiguous bank's HBM
+        pod = Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
+                  max_len=2 * max_len, platform=args.platform, seed=args.seed,
+                  paged=True, page_size=args.page_size,
+                  n_pages=args.slots * (-(-max_len // args.page_size)) + 1)
+    else:
+        pod = Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
+                  max_len=max_len, platform=args.platform, seed=args.seed)
     sched = ContinuousScheduler(pod, fairness_cap=args.fairness_cap)
     cfg = pod.engines[0].container.arch
     rng = np.random.default_rng(args.seed)
@@ -170,6 +178,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--arrive-per-tick", type=int, default=8,
                     help="staggered arrivals: requests arriving per tick")
     ap.add_argument("--fairness-cap", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (shared page pool + Pallas "
+                         "paged-attention) instead of per-slot slabs")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--root", default=".stevedore")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

@@ -284,6 +284,46 @@ def kv_cache_specs(window: int = 0):
     return {"k": spec, "v": spec}
 
 
+def paged_decode_attn(p: dict, x: jax.Array, layer_cache: dict,
+                      idx: jax.Array, page_table: jax.Array,
+                      cfg: ModelConfig, geom: AttnGeometry,
+                      window: int = 0):
+    """One-token decode over a PAGED KV pool (slot-granular only).
+
+    x: (B,1,D); layer_cache k/v: (n_kv, n_pages, page_size, hd) -- the
+    layer's global page pool; idx: (B,) per-row positions; page_table:
+    (B, max_pages) physical page ids (garbage page 0 where unmapped).
+
+    Writes the new token's K/V into page ``table[b, idx//ps]`` at offset
+    ``idx % ps`` (the scheduler guarantees that page is allocated before
+    dispatch -- alloc-on-write happens host-side in the PagePool), then
+    attends through repro.kernels.paged_attention (Pallas on TPU, XLA
+    oracle elsewhere). Free slots write through table rows reset to the
+    garbage page; their output is discarded by the host."""
+    if window:
+        raise NotImplementedError(
+            "paged decode supports full attention only (ring-buffer windows "
+            "keep the contiguous per-slot layout)")
+    from repro.kernels.paged_attention.ops import paged_attention
+    B = x.shape[0]
+    positions = idx[:, None].astype(jnp.int32)
+    q, k, v = project_qkv(p, x, cfg, geom, positions)   # k/v: (B,1,n_kv,hd)
+    n_kv, n_pages, ps, hd = layer_cache["k"].shape
+    mp = page_table.shape[1]
+    page = jnp.take_along_axis(
+        page_table, jnp.clip(idx // ps, 0, mp - 1)[:, None], axis=1)[:, 0]
+    off = idx % ps
+    knew = jnp.moveaxis(k[:, 0], 1, 0)                  # (n_kv, B, hd)
+    vnew = jnp.moveaxis(v[:, 0], 1, 0)
+    ck = layer_cache["k"].at[:, page, off].set(
+        knew.astype(layer_cache["k"].dtype))
+    cv = layer_cache["v"].at[:, page, off].set(
+        vnew.astype(layer_cache["v"].dtype))
+    ctx = paged_attention(q[:, 0], ck, cv, page_table,
+                          idx.astype(jnp.int32) + 1, window=window)
+    return attn_out(p, ctx[:, None]), {"k": ck, "v": cv}
+
+
 def decode_attn(p: dict, x: jax.Array, layer_cache: dict, idx: jax.Array,
                 cfg: ModelConfig, geom: AttnGeometry, window: int = 0):
     """One-token decode. x: (B,1,D); layer_cache k/v: (B,S,n_kv,hd);

@@ -188,6 +188,37 @@ class Model:
             }
         return {}
 
+    def paged_cache_defs(self, n_pages: int, page_size: int,
+                         dtype=jnp.bfloat16) -> dict:
+        """Cache defs for PAGED serving: per attention layer one global page
+        pool ``(n_kv, n_pages, page_size, hd)`` shared by every slot through
+        the host-side page table (one table for all layers -- allocation is
+        identical layer-to-layer). Ring-buffer (windowed) and recurrent
+        caches are per-slot state, not pageable history -> unsupported."""
+        cfg = self.cfg
+        if cfg.attn_kind == "local" and cfg.window:
+            raise NotImplementedError(
+                "paged KV cache does not support sliding-window attention "
+                "(ring-buffer caches stay contiguous)")
+        d: dict = {}
+        for si, st in enumerate(self.stages):
+            unit: dict = {}
+            for bi, kind in enumerate(st.unit):
+                if kind in ("ssm", "rec", "local"):
+                    raise NotImplementedError(
+                        f"paged KV cache does not support {kind!r} blocks "
+                        "(windowed/recurrent caches stay contiguous)")
+                g = self.geom
+                spec = ("kv_heads", None, None, None)
+                unit[f"b{bi}"] = stack_defs({
+                    "k": ParamDef((g.n_kv, n_pages, page_size, g.head_dim),
+                                  spec, "zeros"),
+                    "v": ParamDef((g.n_kv, n_pages, page_size, g.head_dim),
+                                  spec, "zeros"),
+                }, st.count)
+            d[f"stage{si}"] = unit
+        return d
+
     # -- forward (train / prefill) ------------------------------------------
     def forward(self, params: dict, tokens: jax.Array,
                 frontend_embeds: jax.Array | None = None,
@@ -318,10 +349,14 @@ class Model:
 
     # -- decode ------------------------------------------------------------
     def decode_step(self, params: dict, cache: dict, tokens: jax.Array,
-                    idx: jax.Array):
+                    idx: jax.Array, page_table: jax.Array | None = None):
         """tokens: (B,1); idx: int32 position -- scalar (lockstep batch) or
         (B,) per-row positions (slot-granular continuous batching).
         -> (logits, new_cache).
+
+        With ``page_table`` (B, max_pages) the attention caches are PAGED
+        pools (see paged_cache_defs) and decode routes through the paged
+        kernel; without it the caches are contiguous per-slot slabs.
 
         The cache rides in the scan CARRY and is updated in place with
         dynamic_update_index (params are dynamically indexed per layer).
@@ -335,7 +370,7 @@ class Model:
         x = self.constrain(x, ("batch", "seq", "embed"))
         new_cache: dict = {}
         for si, st in enumerate(self.stages):
-            body = self._make_decode_body(st, idx)
+            body = self._make_decode_body(st, idx, page_table)
             stage_params = params[f"stage{si}"]
 
             def carry_body(carry, i, body=body, stage_params=stage_params):
@@ -361,7 +396,7 @@ class Model:
         logits = lm_logits(params["embed"], x, cfg)
         return logits, new_cache
 
-    def _make_decode_body(self, st: Stage, idx):
+    def _make_decode_body(self, st: Stage, idx, page_table=None):
         cfg, geom = self.cfg, self.geom
 
         def body(carry, xs):
@@ -375,8 +410,13 @@ class Model:
                                         cfg.attn_kind == "local") else 0
                 if kind in ("attn", "local", "moe"):
                     h = apply_norm(p["ln1"], x, cfg.norm)
-                    out, nc = attn_mod.decode_attn(p["attn"], h, c, idx, cfg,
-                                                   geom, window)
+                    if page_table is not None:
+                        out, nc = attn_mod.paged_decode_attn(
+                            p["attn"], h, c, idx, page_table, cfg, geom,
+                            window)
+                    else:
+                        out, nc = attn_mod.decode_attn(p["attn"], h, c, idx,
+                                                       cfg, geom, window)
                     if cfg.parallel_block:
                         x = x + out + apply_mlp(p["mlp"], h, cfg.mlp)
                     else:

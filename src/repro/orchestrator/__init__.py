@@ -7,9 +7,16 @@ doing iteration-level (Orca-style) batching over per-request KV-cache
 slots, and a ``RollingDeployer`` that re-resolves a registry tag and
 blue/green-rolls the fleet with drains -- warm-started through the shared
 CompileCache.
+
+``Pod(..., paged=True)`` swaps the contiguous per-slot KV slabs for a
+global page pool (``PagePool`` + the Pallas paged-attention kernel):
+admission is then bounded by pool pressure instead of per-slot ``max_len``
+slabs, so short requests stop stranding memory and long ones stop being
+rejected by the slab ceiling.
 """
 
 from repro.orchestrator.deployer import RollingDeployer
+from repro.orchestrator.page_pool import PagePool
 from repro.orchestrator.pod import Pod
 from repro.orchestrator.request_queue import GenRequest, RequestQueue
 from repro.orchestrator.scheduler import ContinuousScheduler, SlotEngine
@@ -17,6 +24,7 @@ from repro.orchestrator.scheduler import ContinuousScheduler, SlotEngine
 __all__ = [
     "GenRequest",
     "RequestQueue",
+    "PagePool",
     "Pod",
     "SlotEngine",
     "ContinuousScheduler",

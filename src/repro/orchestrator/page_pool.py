@@ -1,0 +1,145 @@
+"""PagePool: host-side block allocator for the paged KV cache.
+
+The device holds one global pool per layer, ``(n_kv, n_pages, page_size,
+hd)``; this class owns the free-list and the per-slot page table that maps
+logical positions to physical pages. All bookkeeping is host numpy -- the
+only device traffic it generates is the (n_slots, max_pages) int32 table
+shipped with each decode dispatch.
+
+Allocation protocol (reservation-based, preempt-free):
+
+  * ``reserve(slot, n)`` at ADMISSION sets aside the request's worst-case
+    page count (ceil((prompt + budget + chunk) / page_size)). Admission is
+    gated on ``can_reserve`` -- the pool never over-commits, so a running
+    request can never fail to get a page mid-decode and nothing is ever
+    preempted. Backpressure = the scheduler simply stops admitting.
+  * ``alloc_upto(slot, hi)`` is the lazy ALLOC-ON-WRITE: physical pages are
+    pulled from the free-list only when decode is about to write position
+    ``hi`` (prefill bulk-allocates the prompt's pages the same way). A
+    request that exits early (EOS) therefore returns its never-written
+    reserved pages without them ever leaving the free-list.
+  * ``release(slot)`` at COMPLETION returns owned pages and the remaining
+    reservation in one step and resets the table row.
+
+Page 0 is reserved as the *garbage page*: table rows reset to 0, so device
+scatters/gathers through free or not-yet-extended slots land on a real page
+whose contents are never read unmasked. ``capacity`` excludes it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GARBAGE_PAGE = 0
+
+
+class PagePool:
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 max_pages: int):
+        if n_pages < 2:
+            raise ValueError("PagePool needs >= 2 pages (page 0 is garbage)")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.n_slots = int(n_slots)
+        self.max_pages = int(max_pages)
+        self.free: list[int] = list(range(1, self.n_pages))
+        self.table = np.full((self.n_slots, self.max_pages), GARBAGE_PAGE,
+                             np.int32)
+        self.owned: list[list[int]] = [[] for _ in range(self.n_slots)]
+        self.reserved = np.zeros(self.n_slots, np.int64)
+        # accounting (status + the fig7 benchmark)
+        self.pages_allocated = 0
+        self.pages_freed = 0
+        self.peak_in_use = 0
+
+    # -- capacity -----------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (garbage page excluded)."""
+        return self.n_pages - 1
+
+    @property
+    def total_reserved(self) -> int:
+        return int(self.reserved.sum())
+
+    @property
+    def free_unreserved(self) -> int:
+        """Pages neither owned nor promised to an admitted request."""
+        return self.capacity - self.total_reserved
+
+    def pages_for(self, positions: int) -> int:
+        """Pages needed to cover ``positions`` KV positions."""
+        return -(-int(positions) // self.page_size)
+
+    def can_reserve(self, n: int) -> bool:
+        return n <= self.free_unreserved
+
+    # -- allocation ---------------------------------------------------------
+    def reserve(self, slot: int, n: int) -> None:
+        if self.reserved[slot] or self.owned[slot]:
+            raise RuntimeError(f"slot {slot} already holds a reservation")
+        if not self.can_reserve(n):
+            raise RuntimeError(
+                f"cannot reserve {n} pages: {self.free_unreserved} unreserved")
+        self.reserved[slot] = n
+
+    def alloc_upto(self, slot: int, hi: int) -> None:
+        """Ensure pages cover logical positions [0, hi] for ``slot``."""
+        need = self.pages_for(hi + 1)
+        have = len(self.owned[slot])
+        if need <= have:
+            return
+        if need > self.reserved[slot]:
+            raise RuntimeError(
+                f"slot {slot}: {need} pages exceeds reservation "
+                f"{int(self.reserved[slot])}")
+        for j in range(have, need):
+            page = self.free.pop()
+            self.owned[slot].append(page)
+            self.table[slot, j] = page
+            self.pages_allocated += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+
+    def release(self, slot: int) -> None:
+        """Full reclaim: owned pages AND the remaining reservation."""
+        pages = self.owned[slot]
+        self.free.extend(pages)
+        self.pages_freed += len(pages)
+        self.owned[slot] = []
+        self.reserved[slot] = 0
+        self.table[slot, :] = GARBAGE_PAGE
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def in_use(self) -> int:
+        return sum(len(o) for o in self.owned)
+
+    def check(self) -> None:
+        """Invariants; raises AssertionError on any violation. Cheap enough
+        to call after every operation in tests."""
+        owned_all = [p for o in self.owned for p in o]
+        assert GARBAGE_PAGE not in owned_all, "garbage page was allocated"
+        assert GARBAGE_PAGE not in self.free, "garbage page on free-list"
+        assert len(set(owned_all)) == len(owned_all), "page owned twice"
+        assert len(set(self.free)) == len(self.free), "free-list duplicate"
+        assert not (set(owned_all) & set(self.free)), "page both owned+free"
+        assert len(self.free) + len(owned_all) == self.capacity, \
+            "pages leaked or conjured"
+        assert self.pages_allocated - self.pages_freed == len(owned_all)
+        for slot, o in enumerate(self.owned):
+            assert len(o) <= self.reserved[slot], "allocation > reservation"
+            for j, page in enumerate(o):
+                assert self.table[slot, j] == page, "table/owned mismatch"
+            assert (self.table[slot, len(o):] == GARBAGE_PAGE).all(), \
+                "table maps unallocated positions"
+        assert self.total_reserved <= self.capacity, "pool over-committed"
+
+    def status(self) -> dict:
+        return {
+            "pages": self.capacity,
+            "page_size": self.page_size,
+            "in_use": self.in_use,
+            "reserved": self.total_reserved,
+            "free_unreserved": self.free_unreserved,
+            "peak_in_use": self.peak_in_use,
+        }

@@ -27,7 +27,8 @@ class Pod:
     def __init__(self, runtime, ref, *, replicas: int = 2, n_slots: int = 4,
                  max_len: int = 256, platform: str | None = None,
                  seed: int = 0, eos_id: int | None = None,
-                 decode_chunk: int = 4):
+                 decode_chunk: int = 4, paged: bool = False,
+                 page_size: int = 16, n_pages: int | None = None):
         if replicas < 1:
             raise ValueError("a Pod needs at least one replica")
         self.runtime = runtime
@@ -40,6 +41,12 @@ class Pod:
         self.seed = int(seed)
         self.eos_id = eos_id
         self.decode_chunk = int(decode_chunk)
+        # paged KV: every replica gets its own page pool of ``n_pages``
+        # (None -> the HBM of a contiguous (n_slots, max_len) bank) and
+        # max_len becomes the page-table span, not a memory reservation
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self.n_pages = n_pages
         self.pod_id = f"pod-{uuid.uuid4().hex[:8]}"
         self._params: dict[str, object] = {}   # image digest -> shared tree
         self.engines: list[SlotEngine] = [
@@ -61,7 +68,9 @@ class Pod:
         return SlotEngine(c, params, n_slots=self.n_slots,
                           max_len=self.max_len, eos_id=self.eos_id,
                           name=f"{self.pod_id}/r{index}",
-                          decode_chunk=self.decode_chunk)
+                          decode_chunk=self.decode_chunk,
+                          paged=self.paged, page_size=self.page_size,
+                          n_pages=self.n_pages)
 
     def drop_params(self, image_digest: str) -> None:
         """Release a retired generation's shared params (deployer calls

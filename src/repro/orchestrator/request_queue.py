@@ -32,7 +32,8 @@ class GenRequest:
     done_tick: int = -1
     replica: str | None = None
     slot: int | None = None
-    finish_reason: str | None = None    # eos | length
+    finish_reason: str | None = None    # eos | length | oversized
+    error: str | None = None            # human-readable rejection reason
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -78,9 +79,16 @@ class RequestQueue:
     def has_ready(self, tick: int) -> bool:
         return bool(self._q) and self._q[0].arrival <= tick
 
+    def peek_ready(self, tick: int) -> GenRequest | None:
+        """FIFO head if it has arrived, WITHOUT popping -- lets the
+        scheduler hold the head under pool backpressure instead of
+        reordering around it."""
+        return self._q[0] if self.has_ready(tick) else None
+
     def pop_ready(self, tick: int) -> GenRequest | None:
-        """Next request in FIFO order, or None if the head has not arrived."""
+        """Next request in FIFO order, or None if the head has not arrived.
+        The scheduler pops both to admit AND to reject, so ``admitted`` is
+        counted at the admission site, not here."""
         if not self.has_ready(tick):
             return None
-        self.admitted += 1
         return self._q.popleft()

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.orchestrator.page_pool import PagePool
 from repro.orchestrator.request_queue import GenRequest, RequestQueue
 
 _PREFILL_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
@@ -37,16 +38,30 @@ def _insert_slot(big, small, slot):
     return jax.tree.map(leaf, big, small)
 
 
+def _insert_pages(big, small, row):
+    """Scatter one request's page-major prefill cache into the pool.
+
+    ``small`` leaves: (count, n_kv, n_prompt_pages, ps, hd);
+    ``row``: (n_prompt_pages,) physical page ids for the slot. Entries past
+    the allocated prefix are the garbage page 0 -- the prompt's right-pad
+    pages land there and are never read unmasked."""
+    def leaf(b, s):
+        return b.at[:, :, row].set(s.astype(b.dtype))
+    return jax.tree.map(leaf, big, small)
+
+
 # jitted ONCE at module level: jax's trace cache keys on function identity,
 # so a per-engine jit wrapper would re-trace the full-cache update for every
 # replica and every blue/green rollover
 _insert_slot_jit = jax.jit(_insert_slot, donate_argnums=0)
+_insert_pages_jit = jax.jit(_insert_pages, donate_argnums=0)
 
 
 class SlotEngine:
     def __init__(self, container, params, *, n_slots: int, max_len: int,
                  eos_id: int | None = None, name: str | None = None,
-                 decode_chunk: int = 4):
+                 decode_chunk: int = 4, paged: bool = False,
+                 page_size: int = 16, n_pages: int | None = None):
         if container.arch.frontend:
             raise NotImplementedError(
                 "slot serving does not support frontend-embedding archs")
@@ -57,6 +72,7 @@ class SlotEngine:
         self.eos_id = eos_id
         self.name = name or container.container_id
         self.chunk = max(1, int(decode_chunk))
+        self.paged = bool(paged)
 
         # ring-buffer (windowed) and recurrent caches are not right-pad safe
         # (see ServeStepBuilder.build_prefill_slot): use exact-length prefill
@@ -66,24 +82,47 @@ class SlotEngine:
             kinds & {"ssm", "rec", "local"}
             or (cfg.window and cfg.attn_kind == "local"))
 
+        if self.paged:
+            if self.exact_prefill:
+                raise NotImplementedError(
+                    "paged KV serving supports full-attention archs only "
+                    "(windowed/recurrent caches stay contiguous)")
+            self.page_size = int(page_size)
+            # max_len becomes the page-TABLE span (per-request position
+            # ceiling), decoupled from per-slot memory: pages are the budget
+            self.max_pages = -(-self.max_len // self.page_size)
+            # default pool = the HBM a contiguous bank of the same
+            # (n_slots, max_len) geometry would pin, + the garbage page
+            self.n_pages = int(n_pages) if n_pages else (
+                self.n_slots * self.max_pages + 1)
+            self.pool = PagePool(self.n_pages, self.page_size,
+                                 self.n_slots, self.max_pages)
+            shapes = dict(batch=self.n_slots, n_pages=self.n_pages,
+                          page_size=self.page_size, max_pages=self.max_pages)
+            one_kind, chunk_kind = "decode_slots_paged", "decode_chunk_paged"
+        else:
+            self.pool = None
+            shapes = dict(batch=self.n_slots, cache_len=self.max_len)
+            one_kind, chunk_kind = "decode_slots", "decode_chunk"
         if self.chunk == 1:
             # single-tick primitive: same semantics, no scan wrapper
-            one = container.compile_serve_step(
-                "decode_slots", batch=self.n_slots, cache_len=self.max_len)
+            # (*extra = the page table in paged mode, nothing otherwise)
+            one = container.compile_serve_step(one_kind, **shapes)
 
-            def decode(params, cache, toks, pos):
-                nxt, cache = one(params, cache, toks, pos)
+            def decode(params, cache, toks, pos, *extra):
+                nxt, cache = one(params, cache, toks, pos, *extra)
                 return nxt[:, None], nxt[:, None], pos + 1, cache
 
             self.decode = decode
         else:
             self.decode = container.compile_serve_step(
-                "decode_chunk", batch=self.n_slots, cache_len=self.max_len,
-                gen_steps=self.chunk)
+                chunk_kind, gen_steps=self.chunk, **shapes)
         self._prefills: dict[int, object] = {}      # bucket len -> executable
         self._insert = _insert_slot_jit
 
-        self.cache = container.init_slot_cache(self.n_slots, self.max_len)
+        self.cache = (container.init_paged_cache(self.n_pages, self.page_size)
+                      if self.paged
+                      else container.init_slot_cache(self.n_slots, self.max_len))
         self.pos = np.zeros(self.n_slots, np.int32)
         self.cur_tok = np.zeros(self.n_slots, np.int32)
         self.free: list[int] = list(range(self.n_slots))
@@ -103,6 +142,46 @@ class SlotEngine:
     def has_free(self) -> bool:
         return bool(self.free) and not (self.draining or self.stopped)
 
+    def pages_needed(self, req: GenRequest) -> int:
+        """Worst-case page footprint: chunked decode can write up to
+        ``chunk`` positions past the final token (overshoot discard)."""
+        return self.pool.pages_for(req.total_len + self.chunk)
+
+    def fits(self, req: GenRequest) -> bool:
+        """Permanent feasibility: could this request EVER run here?
+
+        ``max_len`` is the authoritative per-request span in BOTH modes
+        (the page table rounds it up to whole pages, but prefill buckets
+        clamp at max_len, so admitting into the rounding slack would
+        crash prefill); paged mode additionally needs the footprint to
+        fit the pool."""
+        if req.total_len + self.chunk > self.max_len:
+            return False
+        return (not self.paged
+                or self.pages_needed(req) <= self.pool.capacity)
+
+    def can_start(self, req: GenRequest) -> bool:
+        """Right-now feasibility: a free slot AND (paged) enough unreserved
+        pool pages to cover the request's worst case. False here is
+        *backpressure*, not rejection -- the scheduler retries next tick."""
+        if not (self.has_free() and self.fits(req)):
+            return False
+        return self.pool.can_reserve(self.pages_needed(req)) \
+            if self.paged else True
+
+    def reject_reason(self, req: GenRequest) -> str:
+        """Why ``fits`` is False -- the oversized-rejection error path."""
+        if self.paged:
+            if req.total_len + self.chunk > self.max_len:
+                return (f"prompt+gen+chunk {req.total_len + self.chunk} "
+                        f"exceeds page-table span {self.max_len} "
+                        f"({self.max_pages} pages x {self.page_size})")
+            return (f"prompt+gen+chunk {req.total_len + self.chunk} needs "
+                    f"{self.pages_needed(req)} pages; pool capacity is "
+                    f"{self.pool.capacity}")
+        return (f"prompt+gen {req.total_len} exceeds slot capacity "
+                f"{self.max_len - self.chunk}")
+
     def bucket(self, prompt_len: int) -> int:
         if self.exact_prefill:
             return prompt_len
@@ -116,10 +195,8 @@ class SlotEngine:
         already finished at prefill (budget of one token, or instant EOS)."""
         # chunked decode can overshoot a finished request by chunk-1 writes;
         # the scheduler pre-screens, so tripping this is an internal bug
-        if req.total_len + self.chunk > self.max_len:
-            raise ValueError(
-                f"request {req.rid}: prompt+gen {req.total_len} exceeds "
-                f"slot capacity {self.max_len - self.chunk}")
+        if not self.fits(req):
+            raise ValueError(f"request {req.rid}: {self.reject_reason(req)}")
         slot = self.free.pop(0)
         self.slots_allocated += 1
         req.slot, req.replica, req.state = slot, self.name, "running"
@@ -130,14 +207,26 @@ class SlotEngine:
         prefill = self._prefills.get(bucket)
         if prefill is None:
             prefill = self.container.compile_serve_step(
-                "prefill_slot", prompt_len=bucket, cache_len=self.max_len)
+                *(("prefill_slot_paged",) if self.paged
+                  else ("prefill_slot",)),
+                prompt_len=bucket,
+                **({"page_size": self.page_size} if self.paged
+                   else {"cache_len": self.max_len}))
             self._prefills[bucket] = prefill
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :P] = req.prompt
 
         t0 = time.perf_counter()
         first, small = prefill(self.params, jnp.asarray(toks), jnp.int32(P))
-        self.cache = self._insert(self.cache, small, jnp.int32(slot))
+        if self.paged:
+            # bulk prompt allocation, then one page-major scatter
+            self.pool.reserve(slot, self.pages_needed(req))
+            self.pool.alloc_upto(slot, P - 1)
+            np_ = -(-bucket // self.page_size)
+            row = jnp.asarray(self.pool.table[slot, :np_])
+            self.cache = _insert_pages_jit(self.cache, small, row)
+        else:
+            self.cache = self._insert(self.cache, small, jnp.int32(slot))
         first = int(jax.block_until_ready(first)[0])
         self.prefill_s += time.perf_counter() - t0
 
@@ -160,9 +249,21 @@ class SlotEngine:
         if not self.active:
             return []
         t0 = time.perf_counter()
-        toks, _, _, self.cache = self.decode(
-            self.params, self.cache,
-            jnp.asarray(self.cur_tok[:, None]), jnp.asarray(self.pos))
+        if self.paged:
+            # alloc-on-write, one chunk ahead: every write position of this
+            # dispatch (pos..pos+chunk-1) must be mapped before the kernel
+            # runs; pages come out of the request's admission reservation,
+            # so this can never fail mid-flight
+            for slot in self.active:
+                self.pool.alloc_upto(slot, int(self.pos[slot]) + self.chunk - 1)
+            toks, _, _, self.cache = self.decode(
+                self.params, self.cache,
+                jnp.asarray(self.cur_tok[:, None]), jnp.asarray(self.pos),
+                jnp.asarray(self.pool.table))
+        else:
+            toks, _, _, self.cache = self.decode(
+                self.params, self.cache,
+                jnp.asarray(self.cur_tok[:, None]), jnp.asarray(self.pos))
         toks = np.asarray(jax.block_until_ready(toks))   # (n_slots, chunk)
         self.decode_s += time.perf_counter() - t0
         self.decode_ticks += self.chunk
@@ -196,6 +297,9 @@ class SlotEngine:
         self.active.pop(req.slot)
         self.free.append(req.slot)
         self.slots_freed += 1
+        if self.paged:
+            # full reclaim the same tick: owned pages + unused reservation
+            self.pool.release(req.slot)
 
     def release(self) -> None:
         """Drop device state (params, slot cache, executables). Called at
@@ -208,7 +312,7 @@ class SlotEngine:
         self._prefills.clear()
 
     def status(self) -> dict:
-        return {
+        out = {
             "container": self.container.container_id,
             "image": self.container.image.short_digest,
             "slots": self.n_slots,
@@ -219,6 +323,9 @@ class SlotEngine:
             "decode_ticks": self.decode_ticks,
             "tokens_generated": self.tokens_generated,
         }
+        if self.paged:
+            out["pool"] = self.pool.status()
+        return out
 
 
 class ContinuousScheduler:
@@ -252,16 +359,29 @@ class ContinuousScheduler:
             engines = [e for e in self.pod.engines if e.has_free()]
             if not engines:
                 break
-            # least-loaded engine keeps replica occupancy balanced without
-            # breaking FIFO (the *request* order is still queue order)
-            eng = min(engines, key=lambda e: len(e.active))
-            req = self.queue.pop_ready(self.tick)
-            if req.total_len + eng.chunk > eng.max_len:
-                # reject the one request; never crash a serving fleet
+            req = self.queue.peek_ready(self.tick)
+            if not any(e.fits(req) for e in self.pod.engines):
+                # permanently infeasible (exceeds every engine's slab /
+                # page-table span / pool): reject the one request; never
+                # crash a serving fleet
+                self.queue.pop_ready(self.tick)
                 req.state, req.finish_reason = "rejected", "oversized"
+                req.error = "; ".join(sorted(
+                    {e.reject_reason(req) for e in self.pod.engines}))
                 req.done_tick = self.tick
                 self.rejected.append(req)
                 continue
+            ready = [e for e in engines if e.can_start(req)]
+            if not ready:
+                # pool-pressure backpressure (paged): feasible but no pages
+                # free right now -- hold the FIFO head, in-flight requests
+                # keep decoding and will release pages; never preempt
+                break
+            # least-loaded engine keeps replica occupancy balanced without
+            # breaking FIFO (the *request* order is still queue order)
+            eng = min(ready, key=lambda e: len(e.active))
+            self.queue.pop_ready(self.tick)
+            self.queue.admitted += 1
             self.admission_order.append(req.rid)
             if eng.start(req, self.tick):
                 done.append(req)

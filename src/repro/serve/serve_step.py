@@ -12,6 +12,11 @@ The slot variants treat the batch dimension as a bank of independent
 (``pos`` per row), so requests of different lengths decode in lockstep and
 a finished slot can be refilled without touching its neighbours.
 
+The ``*_paged`` variants replace the contiguous per-slot slabs with a
+global page pool + per-slot page table (kernels/paged_attention): same
+token-for-token semantics, but slots share KV memory at page granularity
+so admission is bounded by pool pressure, not per-slot ``max_len`` slabs.
+
 Sampling masks physically-padded vocab columns (models pad the vocab to a
 lane/TP multiple -- see models/layers.padded_vocab) so padded ids can never
 be emitted.
@@ -124,6 +129,71 @@ class ServeStepBuilder:
             return jnp.moveaxis(toks, 0, 1), tok, pos, cache
 
         return decode_chunk
+
+    # -- paged variants (KV in a global page pool; see kernels/paged_attention
+    # and orchestrator/page_pool.py) ----------------------------------------
+
+    def build_prefill_slot_paged(self, prompt_len: int,
+                                 page_size: int) -> Callable:
+        """prefill_slot whose cache comes back PAGE-MAJOR, ready to scatter
+        into the pool: each attention entry is (count, n_kv, n_prompt_pages,
+        page_size, hd) with n_prompt_pages = ceil(prompt_len / page_size).
+        The host writes row j of that tree into physical page
+        ``table[slot, j]`` (one jitted scatter -- see scheduler). Padding
+        rows beyond the true ``length`` carry right-pad garbage; the paged
+        mask hides everything >= length until decode overwrites it."""
+        inner = self.build_prefill_slot(prompt_len)
+        np_ = -(-prompt_len // page_size)
+        pad = np_ * page_size - prompt_len
+
+        def prefill_slot_paged(params, tokens, length):
+            first, cache = inner(params, tokens, length)
+
+            def to_pages(e):
+                # (count, 1, S, n_kv, hd) -> (count, n_kv, np_, ps, hd)
+                e = e[:, 0]
+                if pad:
+                    e = jnp.pad(e, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                cnt, _, n_kv, hd = e.shape
+                e = e.reshape(cnt, np_, page_size, n_kv, hd)
+                return e.transpose(0, 3, 1, 2, 4)
+
+            return first, jax.tree.map(to_pages, cache)
+
+        return prefill_slot_paged
+
+    def build_decode_slots_paged(self) -> Callable:
+        """One decode tick over the slot bank with paged KV: identical
+        semantics to decode_slots plus the (B, max_pages) page table."""
+        vocab = self.model.cfg.vocab_size
+
+        def decode_slots_paged(params, cache, tokens, pos, page_table):
+            logits, new_cache = self.model.decode_step(
+                params, cache, tokens, pos, page_table=page_table)
+            return greedy_sample(logits[:, -1], vocab), new_cache
+
+        return decode_slots_paged
+
+    def build_decode_chunk_paged(self, n_steps: int) -> Callable:
+        """Multi-step paged slot decode. The page table is FIXED for the
+        whole chunk: the scheduler pre-allocates pages covering every write
+        position pos..pos+n_steps-1 before dispatch (alloc-on-write happens
+        host-side, bounded one chunk ahead)."""
+        vocab = self.model.cfg.vocab_size
+
+        def decode_chunk_paged(params, cache, tokens, pos, page_table):
+            def body(carry, _):
+                cache, tok, pos = carry
+                logits, cache = self.model.decode_step(
+                    params, cache, tok, pos, page_table=page_table)
+                nxt = greedy_sample(logits[:, -1], vocab)[:, None]
+                return (cache, nxt, pos + 1), nxt[:, 0]
+
+            (cache, tok, pos), toks = jax.lax.scan(
+                body, (cache, tokens, pos), None, length=n_steps)
+            return jnp.moveaxis(toks, 0, 1), tok, pos, cache
+
+        return decode_chunk_paged
 
     def build_generate_loop(self, n_steps: int) -> Callable:
         """Greedy autoregressive loop (used by examples + integration tests)."""

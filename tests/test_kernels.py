@@ -17,6 +17,8 @@ from repro.kernels.rglru_scan.ref import rglru_scan_ref
 from repro.kernels.ssd.kernel import ssd_pallas
 from repro.kernels.ssd.ref import ssd_ref
 
+pytestmark = pytest.mark.kernels
+
 
 def _tol(dt):
     return 3e-2 if dt == jnp.bfloat16 else 3e-5

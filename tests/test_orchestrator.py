@@ -1,5 +1,7 @@
 """Orchestrator invariants: slot hygiene, FIFO admission, decode parity
-with the lockstep path, EOS early exit, and rolling-upgrade drains."""
+with the lockstep path, EOS early exit, rolling-upgrade drains, and the
+paged-KV serving path (pool-pressure admission, lockstep parity with the
+contiguous scheduler, long-request completion past the old slab ceiling)."""
 
 import numpy as np
 import pytest
@@ -15,6 +17,8 @@ from repro.orchestrator import (
     RequestQueue,
     RollingDeployer,
 )
+
+pytestmark = pytest.mark.orchestrator
 
 IMAGEFILE = """
 FROM scratch
@@ -215,7 +219,8 @@ def test_queue_rejects_oversized_and_dup():
 
 def test_oversized_request_rejected_not_fatal(rt):
     """One oversized request is rejected; the fleet keeps serving and
-    well-sized requests behind it still complete."""
+    well-sized requests behind it still complete. The rejection reason
+    names the actual limit (slot slab here, pool/span when paged)."""
     pod = Pod(rt, "stable", replicas=1, n_slots=1, max_len=32)
     sched = ContinuousScheduler(pod)
     bad = GenRequest(rid=0, prompt=np.arange(20), max_new_tokens=20)
@@ -223,9 +228,149 @@ def test_oversized_request_rejected_not_fatal(rt):
     sched.submit([bad, ok])
     sched.run(max_ticks=100)
     assert bad.state == "rejected" and bad.finish_reason == "oversized"
+    assert "slot capacity" in bad.error
     assert sched.rejected == [bad]
     assert ok.state == "done" and len(ok.tokens) == 4
     assert sched.admission_order == [1]
+
+
+def test_oversized_rejection_names_pool_not_slots_when_paged(rt):
+    """After paging, the oversized error path reports page-pool/table
+    limits -- never the retired per-slot slab capacity."""
+    # pool of 7 usable pages x 8 = 56 positions; span 128
+    pod = Pod(rt, "stable", replicas=1, n_slots=2, max_len=128,
+              paged=True, page_size=8, n_pages=8)
+    sched = ContinuousScheduler(pod)
+    bad = GenRequest(rid=0, prompt=np.arange(40), max_new_tokens=40)  # 10+ pages
+    ok = GenRequest(rid=1, prompt=np.arange(6), max_new_tokens=4)
+    sched.submit([bad, ok])
+    sched.run(max_ticks=200)
+    assert bad.state == "rejected" and bad.finish_reason == "oversized"
+    assert "pool capacity" in bad.error and "pages" in bad.error
+    assert "slot capacity" not in bad.error
+    assert ok.state == "done" and len(ok.tokens) == 4
+    # span violation reported distinctly
+    eng = pod.engines[0]
+    huge = GenRequest(rid=2, prompt=np.arange(4), max_new_tokens=200)
+    with pytest.raises(ValueError, match="page-table span"):
+        eng.start(huge, tick=0)
+
+
+# ---------------------------------------------------------------------------
+# paged KV serving
+# ---------------------------------------------------------------------------
+
+def test_paged_lockstep_parity_with_contiguous(rt):
+    """The paged scheduler must reproduce the contiguous scheduler
+    token-for-token on a mixed-length batch -- paging is a memory layout,
+    never a numerics change."""
+    def trace():
+        rng = np.random.default_rng(7)
+        return [GenRequest(rid=i,
+                           prompt=rng.integers(0, 256, int(rng.integers(3, 18))),
+                           max_new_tokens=int(rng.integers(2, 12)))
+                for i in range(10)]
+
+    results = []
+    for paged in (False, True):
+        pod = Pod(rt, "stable", replicas=1, n_slots=3, max_len=56,
+                  paged=paged, page_size=8)
+        sched = ContinuousScheduler(pod, fairness_cap=3)
+        reqs = trace()
+        sched.submit(reqs)
+        sched.run(max_ticks=5000)
+        assert all(r.state == "done" for r in reqs)
+        results.append([r.tokens for r in reqs])
+    assert results[0] == results[1]
+    # pool hygiene after the full trace: everything reclaimed
+    eng = pod.engines[0]
+    eng.pool.check()
+    assert eng.pool.in_use == 0 and eng.pool.total_reserved == 0
+
+
+def test_paged_long_request_exceeds_old_slab(rt):
+    """A request whose prompt+gen exceeds the contiguous per-slot max_len
+    completes via paged slots AT THE SAME KV HBM: the pool equals the old
+    2x32 bank, but one request may span 56 of its 64 positions."""
+    contig = Pod(rt, "stable", replicas=1, n_slots=2, max_len=32)
+    sched_c = ContinuousScheduler(contig)
+    long_c = GenRequest(rid=0, prompt=np.arange(20), max_new_tokens=30)
+    sched_c.submit(long_c)
+    sched_c.run(max_ticks=100)
+    assert long_c.state == "rejected"
+
+    paged = Pod(rt, "stable", replicas=1, n_slots=2, max_len=64,
+                paged=True, page_size=8, n_pages=9)   # 8 pages = 2x32 HBM
+    sched_p = ContinuousScheduler(paged)
+    long_p = GenRequest(rid=0, prompt=np.arange(20), max_new_tokens=30)
+    sched_p.submit(long_p)
+    sched_p.run(max_ticks=1000)
+    assert long_p.state == "done" and len(long_p.tokens) == 30
+    assert long_p.finish_reason == "length"
+
+
+def test_paged_pool_backpressure_holds_fifo_head(rt):
+    """When free pages cannot cover the head request's footprint, admission
+    stalls (no reorder, no preempt, no reject) until decode releases pages;
+    everything still completes in submission order."""
+    # 7 usable pages; each request needs ceil((8+8+4)/8)=3 -> only 2 resident
+    pod = Pod(rt, "stable", replicas=1, n_slots=4, max_len=64,
+              paged=True, page_size=8, n_pages=8)
+    sched = ContinuousScheduler(pod, fairness_cap=4)
+    reqs = [GenRequest(rid=i, prompt=np.arange(1, 9) * (i + 1) % 250,
+                       max_new_tokens=8) for i in range(6)]
+    sched.submit(reqs)
+    sched.step()
+    eng = pod.engines[0]
+    assert len(eng.active) == 2                 # 3rd admission backpressured
+    assert eng.pool.total_reserved == 6
+    assert sched.rejected == []
+    sched.run(max_ticks=5000)
+    assert all(r.state == "done" and len(r.tokens) == 8 for r in reqs)
+    assert sched.admission_order == [r.rid for r in reqs]
+    eng.pool.check()
+    assert eng.pool.in_use == 0
+
+
+def test_paged_chunk1_matches_chunk4(rt):
+    """Paged decode_slots (chunk=1) and paged decode_chunk agree."""
+    outs = []
+    for chunk in (1, 4):
+        pod = Pod(rt, "stable", replicas=1, n_slots=2, max_len=56,
+                  decode_chunk=chunk, paged=True, page_size=8)
+        sched = ContinuousScheduler(pod)
+        reqs = [GenRequest(rid=i, prompt=np.arange(1, 7) * (i + 1) % 250,
+                           max_new_tokens=6) for i in range(3)]
+        sched.submit(reqs)
+        sched.run(max_ticks=1000)
+        outs.append([r.tokens for r in reqs])
+    assert outs[0] == outs[1]
+
+
+def test_paged_nonmultiple_max_len_rejects_instead_of_crashing(rt):
+    """max_len not a multiple of page_size: the page table rounds UP to
+    whole pages, but admission must still enforce max_len (the prefill
+    bucket ceiling) -- a prompt in the rounding slack is rejected, never
+    admitted into a crash (regression: fits() used the rounded span)."""
+    pod = Pod(rt, "stable", replicas=1, n_slots=2, max_len=49,
+              paged=True, page_size=16)
+    sched = ContinuousScheduler(pod)
+    bad = GenRequest(rid=0, prompt=np.arange(48), max_new_tokens=12)
+    ok = GenRequest(rid=1, prompt=np.arange(6), max_new_tokens=4)
+    sched.submit([bad, ok])
+    sched.run(max_ticks=200)                  # must not raise
+    assert bad.state == "rejected" and "page-table span 49" in bad.error
+    assert ok.state == "done" and len(ok.tokens) == 4
+
+
+def test_paged_rejects_recurrent_archs(rt):
+    """Ring-buffer/recurrent caches stay contiguous: paged pods refuse
+    them loudly instead of silently corrupting state."""
+    rt.build(IMAGEFILE.replace("llama3.2-3b-smoke", "mamba2-2.7b-smoke"),
+             tag="rec-paged")
+    with pytest.raises(NotImplementedError, match="full-attention"):
+        Pod(rt, "rec-paged", replicas=1, n_slots=2, max_len=56, paged=True,
+            page_size=8)
 
 
 def test_pod_state_visible_to_ps(rt):
