@@ -82,6 +82,7 @@ def cmd_ps(rt: Runtime, args) -> int:
                 continue
             reps = pod.get("replicas", [])
             active = sum(r.get("active", 0) for r in reps)
+            prefills = sum(r.get("prefill_execs", 0) for r in reps)
             phase = pod.get("phase", "-")
             pid = pod.get("pid")
             if pid is not None and not _pid_alive(pid):
@@ -89,7 +90,8 @@ def cmd_ps(rt: Runtime, args) -> int:
             print(f"{pod.get('pod', p.stem):26s} "
                   f"image={pod.get('image', '?')} "
                   f"replicas={len(reps)} capacity={pod.get('capacity', 0)} "
-                  f"active={active} {phase:8s} "
+                  f"free={pod.get('free_slots', 0)} "
+                  f"active={active} prefills={prefills} {phase:8s} "
                   f"ref={pod.get('ref') or '-'}")
     return 0
 

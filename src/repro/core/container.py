@@ -348,14 +348,19 @@ class Container:
                          gen_steps: int | None = None,
                          n_pages: int | None = None,
                          page_size: int | None = None,
-                         max_pages: int | None = None, donate: bool = True):
+                         max_pages: int | None = None,
+                         frontend_len: int | None = None,
+                         per_row: bool | None = None, donate: bool = True):
         """jit + lower a serving step at arbitrary (non-cell) shapes.
 
         kinds: ``prefill`` (B,P -> last_logits+cache), ``prefill_slot``
-        (1,P bucket + length -> first token + cache), ``decode_slots``
-        (slot bank, per-row positions), ``generate`` (scanned greedy loop),
-        plus the ``*_paged`` variants (KV as a global page pool + per-slot
-        page table; see kernels/paged_attention).
+        (B,P bucket + lengths -> first tokens + cache; ``frontend_len``
+        adds a modality-prefix buffer + per-row prefix lengths ahead of the
+        prompt), ``decode_slots`` (slot bank, per-row positions),
+        ``generate`` (scanned greedy loop; ``per_row`` makes the start
+        position a (B,) vector for mixed-length waves), plus the
+        ``*_paged`` variants (KV as a global page pool + per-slot page
+        table; see kernels/paged_attention).
         All carry explicit in/out shardings -- replicated-output caches
         would all-gather the full KV (see lower_step NOTE).
         """
@@ -379,16 +384,28 @@ class Container:
                 out_shardings=(logits_sh, cache_sh))
             return jitted.lower(aparams, toks)
         if kind == "prefill_slot":
-            fn = b.build_prefill_slot(cache_len)
-            toks = jax.ShapeDtypeStruct((1, prompt_len), tok)
-            length = jax.ShapeDtypeStruct((), tok)
+            B = batch or 1
+            fe_len = frontend_len or 0
+            fn = b.build_prefill_slot(cache_len, fe_len)
+            toks = jax.ShapeDtypeStruct((B, prompt_len), tok)
+            # B=1 (orchestrator slot prefill): scalar length, replicated
+            # outputs; B>1 (static wave prefill): per-row length vectors
+            length = (jax.ShapeDtypeStruct((B,), tok) if B > 1
+                      else jax.ShapeDtypeStruct((), tok))
+            len_sh = self._batch_sharding((B,)) if B > 1 else rep
+            first_sh = self._batch_sharding((B,)) if B > 1 else rep
             cache_sh = self._cache_shardings(
-                self.model.cache_defs(1, cache_len, self.cache_dtype))
-            jitted = jax.jit(
-                fn,
-                in_shardings=(pspec, self._batch_sharding(toks.shape), rep),
-                out_shardings=(rep, cache_sh))
-            return jitted.lower(aparams, toks, length)
+                self.model.cache_defs(B, cache_len, self.cache_dtype))
+            args = [aparams, toks, length]
+            arg_sh = [pspec, self._batch_sharding(toks.shape), len_sh]
+            if fe_len:
+                fe = jax.ShapeDtypeStruct((B, fe_len, self.arch.d_model),
+                                          self.cache_dtype)
+                args += [fe, length]
+                arg_sh += [self._batch_sharding(fe.shape), len_sh]
+            jitted = jax.jit(fn, in_shardings=tuple(arg_sh),
+                             out_shardings=(first_sh, cache_sh))
+            return jitted.lower(*args)
         if kind == "decode_slots":
             fn = b.build_decode_slots()
             cache = self.slot_cache_specs(batch, cache_len)
@@ -421,18 +438,24 @@ class Container:
             )
             return jitted.lower(aparams, cache, toks, pos)
         if kind == "prefill_slot_paged":
-            fn = b.build_prefill_slot_paged(prompt_len, page_size)
-            np_ = -(-prompt_len // page_size)
+            fe_len = frontend_len or 0
+            fn = b.build_prefill_slot_paged(prompt_len, page_size, fe_len)
+            np_ = -(-(prompt_len + fe_len) // page_size)
             toks = jax.ShapeDtypeStruct((1, prompt_len), tok)
             length = jax.ShapeDtypeStruct((), tok)
             # the page-major small cache reuses the pool defs at np_ pages
             cache_sh = self._cache_shardings(
                 self.model.paged_cache_defs(np_, page_size, self.cache_dtype))
-            jitted = jax.jit(
-                fn,
-                in_shardings=(pspec, self._batch_sharding(toks.shape), rep),
-                out_shardings=(rep, cache_sh))
-            return jitted.lower(aparams, toks, length)
+            args = [aparams, toks, length]
+            arg_sh = [pspec, self._batch_sharding(toks.shape), rep]
+            if fe_len:
+                fe = jax.ShapeDtypeStruct((1, fe_len, self.arch.d_model),
+                                          self.cache_dtype)
+                args += [fe, length]
+                arg_sh += [self._batch_sharding(fe.shape), rep]
+            jitted = jax.jit(fn, in_shardings=tuple(arg_sh),
+                             out_shardings=(rep, cache_sh))
+            return jitted.lower(*args)
         if kind in ("decode_slots_paged", "decode_chunk_paged"):
             chunked = kind == "decode_chunk_paged"
             fn = (b.build_decode_chunk_paged(gen_steps) if chunked
@@ -462,12 +485,16 @@ class Container:
             cache_sh = self._cache_shardings(
                 self.model.cache_defs(batch, cache_len, self.cache_dtype))
             first = jax.ShapeDtypeStruct((batch, 1), tok)
-            start = jax.ShapeDtypeStruct((), tok)
+            # per_row: mixed-length waves decode from per-row start
+            # positions (decode_attn already takes (B,) idx vectors)
+            start = (jax.ShapeDtypeStruct((batch,), tok) if per_row
+                     else jax.ShapeDtypeStruct((), tok))
+            start_sh = self._batch_sharding((batch,)) if per_row else rep
             out_sh = self._batch_sharding((batch, gen_steps))
             jitted = jax.jit(
                 fn,
                 in_shardings=(pspec, cache_sh,
-                              self._batch_sharding(first.shape), rep),
+                              self._batch_sharding(first.shape), start_sh),
                 out_shardings=(out_sh, cache_sh),
                 donate_argnums=(1,) if donate else (),
             )

@@ -11,6 +11,11 @@ prefill + scanned greedy decode -- kept as the fig6 comparison point. Both
 modes compile through the Container serve path (explicit in/out shardings +
 CompileCache), not ad-hoc re-jits: a second run of either mode, or a second
 replica, deserializes the executables instead of re-tracing.
+
+Both modes replay the SAME deterministic trace (prompts, budgets, and --
+for frontend-embedding archs like musicgen/internvl2 -- per-request
+audio/vision prefix embeddings), and both return ``request_tokens``:
+continuous and static produce identical tokens request-for-request.
 """
 
 from __future__ import annotations
@@ -35,24 +40,47 @@ def _tail_budgets(gen: int, n: int) -> list[int]:
     return [tail[i % len(tail)] for i in range(n)]
 
 
+def _frontend_width(cfg) -> int:
+    return cfg.frontend_len if cfg.frontend else 0
+
+
 def _build_requests(args, cfg, rng):
-    """Deterministic staggered, variable-length trace."""
+    """Deterministic staggered, variable-length trace.
+
+    Frontend-embedding archs (musicgen/internvl2) get a per-request
+    modality prefix: a deterministic stand-in for precomputed EnCodec
+    frames / InternViT patch embeddings (the frontends are stubs per the
+    assignment). Both serve modes replay this SAME trace, so continuous and
+    static produce identical tokens request-for-request."""
     from repro.orchestrator import GenRequest
     reqs = []
     budgets = _tail_budgets(args.gen, args.requests)
+    fe_len = _frontend_width(cfg)
     for i in range(args.requests):
         plen = int(args.prompt_len * (0.5 + 0.5 * ((i * 7919) % 97) / 96))
+        fe = (0.02 * rng.standard_normal((fe_len, cfg.d_model)).astype(
+            np.float32) if fe_len else None)
         reqs.append(GenRequest(
             rid=i,
             prompt=rng.integers(0, cfg.vocab_size, max(1, plen)),
             max_new_tokens=budgets[i],
-            arrival=i // max(1, args.arrive_per_tick)))
+            arrival=i // max(1, getattr(args, "arrive_per_tick", 8)),
+            frontend=fe))
     return reqs
+
+
+def _arch_config(rt: Runtime, image):
+    """The image's resolved ModelConfig (without running a container)."""
+    from repro.configs import get_config
+    cfg = (image if not isinstance(image, str) else rt.pull(image)).config()
+    return get_config(cfg["arch"]["name"], **cfg["arch"].get("overrides", {}))
 
 
 def serve_continuous(rt: Runtime, image, args) -> dict:
     from repro.orchestrator import ContinuousScheduler, Pod
-    max_len = args.prompt_len + args.gen + 8   # + chunk-overshoot margin
+    cfg = _arch_config(rt, image)
+    # per-request span: frontend prefix + prompt + gen + chunk-overshoot
+    max_len = _frontend_width(cfg) + args.prompt_len + args.gen + 8
     if getattr(args, "paged", False):
         # paged: max_len is only the per-request span; double it so long
         # requests fit, and size the pool to the contiguous bank's HBM
@@ -64,7 +92,6 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
         pod = Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
                   max_len=max_len, platform=args.platform, seed=args.seed)
     sched = ContinuousScheduler(pod, fairness_cap=args.fairness_cap)
-    cfg = pod.engines[0].container.arch
     rng = np.random.default_rng(args.seed)
     reqs = _build_requests(args, cfg, rng)
 
@@ -93,6 +120,7 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
         "p50_latency_ticks": lat[len(lat) // 2] if lat else 0,
         "p99_latency_ticks": lat[min(len(lat) - 1,
                                      int(0.99 * len(lat)))] if lat else 0,
+        "request_tokens": {r.rid: list(r.tokens) for r in done},
         "pod": pod.status(),
     }
     print(f"[serve] pod={pod.pod_id} image={pod.image.short_digest} "
@@ -105,59 +133,83 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
 
 
 def serve_static(rt: Runtime, image, args) -> dict:
-    """Fixed-batch baseline THROUGH the container compile path."""
-    from repro.serve.serve_step import greedy_sample
+    """Fixed-batch baseline THROUGH the container compile path.
+
+    Replays the SAME trace as continuous mode, one wave of ``slots``
+    requests at a time: wave prefill with per-row prompt (and frontend
+    prefix) lengths, then a scanned greedy decode of the full ``gen``
+    budget for every wave member -- the static batch cannot release a
+    finished slot, which is exactly the waste fig6 measures. Tokens are
+    identical to continuous mode request-for-request."""
     c = rt.run(image, platform=args.platform)
     cfg = c.arch
-    if cfg.frontend:
-        raise NotImplementedError(
-            "serve driver is text-only; frontend-embedding archs are not "
-            "supported (matches the continuous path's SlotEngine check)")
     B, P, G = args.slots, args.prompt_len, args.gen
-    cache_len = P + G + 1
-    prefill = c.compile_serve_step("prefill", batch=B, prompt_len=P,
-                                   cache_len=cache_len)
+    F = _frontend_width(cfg)
+    cache_len = F + P + G + 1
+    shapes = dict(batch=B, prompt_len=P, cache_len=cache_len)
+    if F:
+        shapes["frontend_len"] = F
+    prefill = c.compile_serve_step("prefill_slot", **shapes)
     generate = c.compile_serve_step("generate", batch=B, cache_len=cache_len,
-                                    gen_steps=G)
+                                    gen_steps=G, per_row=True)
     rng = np.random.default_rng(args.seed)
-    gens = _tail_budgets(G, args.requests)
+    reqs = _build_requests(args, cfg, rng)
     params = c.init_params(args.seed)
 
     toks_useful = 0
     t_pre = t_dec = 0.0
     waves = 0
+    request_tokens: dict[int, list[int]] = {}
     t0 = time.perf_counter()
-    for lo in range(0, args.requests, B):
-        wave = gens[lo:lo + B]
-        prompts = jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
+    for lo in range(0, len(reqs), B):
+        wave = reqs[lo:lo + B]
+        toks = np.zeros((B, P), np.int32)
+        lens = np.ones(B, np.int32)          # pad rows: 1 real token (row 0)
+        fls = np.zeros(B, np.int32)
+        fe = np.zeros((B, F, cfg.d_model), np.float32) if F else None
+        for j, r in enumerate(wave):
+            toks[j, :r.prompt_len] = r.prompt
+            lens[j] = r.prompt_len
+            if F and r.frontend is not None:
+                fe[j, :r.frontend_len] = r.frontend
+                fls[j] = r.frontend_len
+        fe_args = ((jnp.asarray(fe, c.cache_dtype), jnp.asarray(fls))
+                   if F else ())
         t1 = time.perf_counter()
-        last, cache = prefill(params, prompts)
-        jax.block_until_ready(last)
+        first, cache = prefill(params, jnp.asarray(toks), jnp.asarray(lens),
+                               *fe_args)
+        jax.block_until_ready(first)
         t_pre += time.perf_counter() - t1
-        first = greedy_sample(last, cfg.vocab_size)[:, None]
         t1 = time.perf_counter()
         # the static batch cannot release a finished slot: it decodes the
-        # full G steps for everyone in the wave
-        toks, _ = generate(params, cache, first, jnp.int32(P))
-        jax.block_until_ready(toks)
+        # full G steps for everyone in the wave, each row at its own
+        # prefix+prompt start position
+        gen_toks, _ = generate(params, cache, jnp.asarray(first)[:, None],
+                               jnp.asarray(fls + lens))
+        jax.block_until_ready(gen_toks)
         t_dec += time.perf_counter() - t1
-        # same convention as continuous mode: a budget of g counts g tokens
-        # (the prefill-sampled first token is inside the budget)
-        toks_useful += sum(min(g, G) for g in wave)
+        first_np, gen_np = np.asarray(first), np.asarray(gen_toks)
+        for j, r in enumerate(wave):
+            # same convention as continuous mode: a budget of g counts g
+            # tokens (the prefill-sampled first token is inside the budget)
+            g = min(r.max_new_tokens, G)
+            request_tokens[r.rid] = (
+                [int(first_np[j])] + [int(t) for t in gen_np[j, :g - 1]])
+            toks_useful += g
         waves += 1
     wall = time.perf_counter() - t0
     out = {
         "mode": "static",
-        "requests": args.requests,
+        "requests": len(reqs),
         "tokens": toks_useful,
         "wall_s": wall,
         "decode_s": t_dec,
         "prefill_s": t_pre,
         "decode_ticks": waves * G,
         "decode_tok_per_s": toks_useful / t_dec if t_dec else 0.0,
+        "request_tokens": request_tokens,
     }
-    print(f"[serve] static baseline: {args.requests} requests in {waves} "
+    print(f"[serve] static baseline: {len(reqs)} requests in {waves} "
           f"waves of {B}: {toks_useful} useful tokens, decode "
           f"{out['decode_tok_per_s']:.0f} tok/s ({t_dec:.2f}s)")
     return out

@@ -222,13 +222,33 @@ class Model:
     # -- forward (train / prefill) ------------------------------------------
     def forward(self, params: dict, tokens: jax.Array,
                 frontend_embeds: jax.Array | None = None,
+                frontend_len: jax.Array | None = None,
                 collect_cache: bool = False, cache_len: int | None = None):
-        """tokens: (B, S_tok). Returns logits (B,S,Vp) [, cache]."""
+        """tokens: (B, S_tok). Returns logits (B,S,Vp) [, cache].
+
+        ``frontend_embeds`` (B, F, D) is a modality prefix prepended ahead of
+        the token embeddings. ``frontend_len`` (scalar or (B,)) marks how many
+        of the F buffer rows are real: the prefix and tokens are then packed
+        contiguously (real frontend rows, then tokens, then all the right-pad
+        garbage) so positions stay gap-free and the causal mask hides every
+        pad row -- the serving path's right-pad contract. With
+        ``frontend_len == F`` the pack is the identity gather, bitwise equal
+        to the plain concatenation the train path uses."""
         cfg = self.cfg
         dtype = self.act_dtype
         x = embed_tokens(params["embed"], tokens, cfg, dtype)
         if frontend_embeds is not None:
-            x = jnp.concatenate([frontend_embeds.astype(dtype), x], axis=1)
+            fe = frontend_embeds.astype(dtype)
+            x = jnp.concatenate([fe, x], axis=1)
+            if frontend_len is not None:
+                F, S = fe.shape[1], x.shape[1]
+                fl = jnp.broadcast_to(
+                    jnp.asarray(frontend_len, jnp.int32),
+                    (x.shape[0],))[:, None]
+                pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+                src = jnp.where(pos < fl, pos, pos + (F - fl))
+                src = jnp.minimum(src, S - 1)   # tail rows: clamped garbage
+                x = jnp.take_along_axis(x, src[:, :, None], axis=1)
         B, S, _ = x.shape
         x = self.constrain(x, ("batch", "seq", "embed"))
         # (1, S): positions are batch-independent in train/prefill, so the

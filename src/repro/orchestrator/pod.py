@@ -80,7 +80,13 @@ class Pod:
     # -- capacity -----------------------------------------------------------
     @property
     def capacity(self) -> int:
-        return sum(e.n_slots for e in self.engines)
+        """Admissible slot count. Draining/stopped replicas are excluded
+        from BOTH capacity and free_slots: during a blue/green rollover a
+        draining replica can take no new work, so counting its slots as
+        capacity while free_slots reports 0 made `repro ps` overstate
+        headroom by a full replica."""
+        return sum(e.n_slots for e in self.engines
+                   if not (e.draining or e.stopped))
 
     @property
     def free_slots(self) -> int:
@@ -93,6 +99,7 @@ class Pod:
             "ref": self.ref,
             "image": self.image.short_digest,
             "capacity": self.capacity,
+            "free_slots": self.free_slots,
             "phase": ("serving" if any(e.active for e in self.engines)
                       else "idle"),
             "pid": os.getpid(),     # lets `ps` tell live fleets from dead

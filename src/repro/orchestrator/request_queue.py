@@ -23,6 +23,11 @@ class GenRequest:
     max_new_tokens: int
     eos_id: int | None = None
     arrival: int = 0                    # earliest admission tick
+    # modality prefix for frontend-embedding archs (musicgen/internvl2):
+    # (fe_len, d_model) float embeddings consumed AHEAD of the token prompt.
+    # None = unconditional generation (valid on frontend archs too); any
+    # non-None prefix is rejected by text-only engines at admission.
+    frontend: np.ndarray | None = None
 
     # -- runtime state (owned by the scheduler/engine) ----------------------
     state: str = "queued"               # queued | running | done
@@ -41,14 +46,20 @@ class GenRequest:
             raise ValueError(f"request {self.rid}: prompt must be 1-D, non-empty")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens must be >= 1")
+        if self.frontend is not None:
+            self.frontend = np.asarray(self.frontend, np.float32)
+            if self.frontend.ndim != 2 or self.frontend.shape[0] == 0:
+                raise ValueError(
+                    f"request {self.rid}: frontend must be a non-empty "
+                    "(fe_len, d_model) array")
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
 
     @property
-    def total_len(self) -> int:
-        return self.prompt_len + self.max_new_tokens
+    def frontend_len(self) -> int:
+        return 0 if self.frontend is None else int(self.frontend.shape[0])
 
 
 class RequestQueue:

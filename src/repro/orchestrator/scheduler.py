@@ -62,9 +62,6 @@ class SlotEngine:
                  eos_id: int | None = None, name: str | None = None,
                  decode_chunk: int = 4, paged: bool = False,
                  page_size: int = 16, n_pages: int | None = None):
-        if container.arch.frontend:
-            raise NotImplementedError(
-                "slot serving does not support frontend-embedding archs")
         self.container = container
         self.params = params
         self.n_slots = int(n_slots)
@@ -78,6 +75,12 @@ class SlotEngine:
         # (see ServeStepBuilder.build_prefill_slot): use exact-length prefill
         kinds = {k for st in container.model.stages for k in st.unit}
         cfg = container.arch
+        # frontend-embedding archs (musicgen/internvl2): every prefill
+        # executable carries a static (1, fe_len, d_model) prefix buffer;
+        # requests supply up to fe_len real rows (packed ahead of the prompt)
+        self.fe_len = cfg.frontend_len if cfg.frontend else 0
+        self.d_model = cfg.d_model
+        self.fe_dtype = container.cache_dtype
         self.exact_prefill = bool(
             kinds & {"ssm", "rec", "local"}
             or (cfg.window and cfg.attn_kind == "local"))
@@ -142,10 +145,25 @@ class SlotEngine:
     def has_free(self) -> bool:
         return bool(self.free) and not (self.draining or self.stopped)
 
+    def supports(self, req: GenRequest) -> bool:
+        """Arch compatibility: a frontend prefix needs a frontend arch with
+        a wide-enough prefix buffer and a matching embedding width."""
+        if req.frontend is None:
+            return True
+        return (req.frontend_len <= self.fe_len
+                and req.frontend.shape[1] == self.d_model)
+
+    def span(self, req: GenRequest) -> int:
+        """KV positions the request occupies on THIS engine: the STATIC
+        frontend-buffer width (not the request's own prefix length) because
+        the prefill executable's cache covers fe_len + bucket rows no
+        matter how many prefix rows are real."""
+        return self.fe_len + req.prompt_len + req.max_new_tokens
+
     def pages_needed(self, req: GenRequest) -> int:
         """Worst-case page footprint: chunked decode can write up to
         ``chunk`` positions past the final token (overshoot discard)."""
-        return self.pool.pages_for(req.total_len + self.chunk)
+        return self.pool.pages_for(self.span(req) + self.chunk)
 
     def fits(self, req: GenRequest) -> bool:
         """Permanent feasibility: could this request EVER run here?
@@ -155,7 +173,9 @@ class SlotEngine:
         clamp at max_len, so admitting into the rounding slack would
         crash prefill); paged mode additionally needs the footprint to
         fit the pool."""
-        if req.total_len + self.chunk > self.max_len:
+        if not self.supports(req):
+            return False
+        if self.span(req) + self.chunk > self.max_len:
             return False
         return (not self.paged
                 or self.pages_needed(req) <= self.pool.capacity)
@@ -171,23 +191,35 @@ class SlotEngine:
 
     def reject_reason(self, req: GenRequest) -> str:
         """Why ``fits`` is False -- the oversized-rejection error path."""
+        if not self.supports(req):
+            if not self.fe_len:
+                return (f"frontend prefix ({req.frontend_len} rows) on "
+                        f"text-only arch {self.container.arch.name}")
+            if req.frontend_len > self.fe_len:
+                return (f"frontend prefix {req.frontend_len} exceeds arch "
+                        f"frontend_len {self.fe_len}")
+            return (f"frontend embedding width {req.frontend.shape[1]} != "
+                    f"d_model {self.d_model}")
+        what = "frontend+prompt+gen" if self.fe_len else "prompt+gen"
         if self.paged:
-            if req.total_len + self.chunk > self.max_len:
-                return (f"prompt+gen+chunk {req.total_len + self.chunk} "
+            if self.span(req) + self.chunk > self.max_len:
+                return (f"{what}+chunk {self.span(req) + self.chunk} "
                         f"exceeds page-table span {self.max_len} "
                         f"({self.max_pages} pages x {self.page_size})")
-            return (f"prompt+gen+chunk {req.total_len + self.chunk} needs "
+            return (f"{what}+chunk {self.span(req) + self.chunk} needs "
                     f"{self.pages_needed(req)} pages; pool capacity is "
                     f"{self.pool.capacity}")
-        return (f"prompt+gen {req.total_len} exceeds slot capacity "
+        return (f"{what} {self.span(req)} exceeds slot capacity "
                 f"{self.max_len - self.chunk}")
 
     def bucket(self, prompt_len: int) -> int:
+        # the cache row budget left for tokens after the frontend buffer
+        cap = self.max_len - self.fe_len
         if self.exact_prefill:
             return prompt_len
         for b in _PREFILL_BUCKETS:
             if b >= prompt_len:
-                return min(b, self.max_len)
+                return min(b, cap)
         return prompt_len
 
     def start(self, req: GenRequest, tick: int) -> bool:
@@ -206,23 +238,36 @@ class SlotEngine:
         bucket = self.bucket(P)
         prefill = self._prefills.get(bucket)
         if prefill is None:
+            shapes = ({"page_size": self.page_size} if self.paged
+                      else {"cache_len": self.max_len})
+            if self.fe_len:
+                shapes["frontend_len"] = self.fe_len
             prefill = self.container.compile_serve_step(
                 *(("prefill_slot_paged",) if self.paged
                   else ("prefill_slot",)),
-                prompt_len=bucket,
-                **({"page_size": self.page_size} if self.paged
-                   else {"cache_len": self.max_len}))
+                prompt_len=bucket, **shapes)
             self._prefills[bucket] = prefill
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :P] = req.prompt
+        fe_args = ()
+        if self.fe_len:
+            # static-width prefix buffer; real rows packed ahead of the
+            # prompt by Model.forward (fe_len=0 -> pure-token request)
+            fe = np.zeros((1, self.fe_len, self.d_model), np.float32)
+            if req.frontend is not None:
+                fe[0, :req.frontend_len] = req.frontend
+            fe_args = (jnp.asarray(fe, self.fe_dtype),
+                       jnp.int32(req.frontend_len))
 
         t0 = time.perf_counter()
-        first, small = prefill(self.params, jnp.asarray(toks), jnp.int32(P))
+        first, small = prefill(self.params, jnp.asarray(toks), jnp.int32(P),
+                               *fe_args)
+        start_pos = req.frontend_len + P
         if self.paged:
-            # bulk prompt allocation, then one page-major scatter
+            # bulk prefix+prompt allocation, then one page-major scatter
             self.pool.reserve(slot, self.pages_needed(req))
-            self.pool.alloc_upto(slot, P - 1)
-            np_ = -(-bucket // self.page_size)
+            self.pool.alloc_upto(slot, start_pos - 1)
+            np_ = -(-(bucket + self.fe_len) // self.page_size)
             row = jnp.asarray(self.pool.table[slot, :np_])
             self.cache = _insert_pages_jit(self.cache, small, row)
         else:
@@ -232,7 +277,7 @@ class SlotEngine:
 
         req.tokens.append(first)
         self.tokens_generated += 1
-        self.pos[slot] = P                  # next decode writes position P
+        self.pos[slot] = start_pos      # next decode writes here
         self.cur_tok[slot] = first
         self.active[slot] = req
         if self._finished(req, first):
@@ -269,7 +314,13 @@ class SlotEngine:
         self.decode_ticks += self.chunk
 
         finished = []
-        self.pos += self.chunk          # free slots ride along harmlessly
+        # advance ACTIVE rows only: free slots stay parked at 0, so an
+        # engine idling for hours never walks a row position past max_len
+        # (in paged mode pos // page_size would index past the page-table
+        # span -- silently clamped by XLA, out-of-bounds for the real
+        # scalar-prefetch kernel)
+        for slot in self.active:
+            self.pos[slot] += self.chunk
         for slot, req in list(self.active.items()):
             self.cur_tok[slot] = int(toks[slot, -1])
             for k in range(self.chunk):
@@ -297,6 +348,11 @@ class SlotEngine:
         self.active.pop(req.slot)
         self.free.append(req.slot)
         self.slots_freed += 1
+        # park the freed row at position 0: free slots are still dispatched
+        # every chunk (their output is discarded), so an unbounded position
+        # would drift past the cache span while the slot sits idle
+        self.pos[req.slot] = 0
+        self.cur_tok[req.slot] = 0
         if self.paged:
             # full reclaim the same tick: owned pages + unused reservation
             self.pool.release(req.slot)
@@ -322,6 +378,10 @@ class SlotEngine:
             "stopped": self.stopped,
             "decode_ticks": self.decode_ticks,
             "tokens_generated": self.tokens_generated,
+            # one compiled prefill per distinct bucket -- bounded for
+            # pow2-bucketed archs, per distinct prompt length in
+            # exact-prefill mode (watch this in `ps` for unbounded growth)
+            "prefill_execs": len(self._prefills),
         }
         if self.paged:
             out["pool"] = self.pool.status()

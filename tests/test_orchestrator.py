@@ -379,4 +379,75 @@ def test_pod_state_visible_to_ps(rt):
     assert state.exists()
     rec = pod.status()
     assert rec["capacity"] == 2
+    assert rec["free_slots"] == 2
     assert rec["replicas"][0]["image"] == pod.image.short_digest
+
+
+# ---------------------------------------------------------------------------
+# slot-engine drift regressions
+# ---------------------------------------------------------------------------
+
+def test_free_slot_positions_stay_parked(rt):
+    """Regression: tick() used to advance EVERY row's position, so a
+    long-idle free slot's position grew unboundedly -- in paged mode
+    pos // page_size then indexed past the page-table span. Free rows must
+    stay parked at 0 while active rows advance, and a freed slot must be
+    reset the tick it completes."""
+    for paged in (False, True):
+        pod = Pod(rt, "stable", replicas=1, n_slots=4, max_len=64,
+                  paged=paged, page_size=8)
+        eng = pod.engines[0]
+        sched = ContinuousScheduler(pod)
+        long = GenRequest(rid=0, prompt=np.arange(5), max_new_tokens=30)
+        sched.submit(long)
+        while long.state != "done":
+            sched.step()
+            for s in eng.free:
+                assert eng.pos[s] == 0, (paged, s, eng.pos)
+            if paged:
+                assert (eng.pos // eng.page_size < eng.max_pages).all()
+        # the completed request's slot was reset on completion
+        assert (eng.pos == 0).all()
+        # and many idle ticks later nothing has drifted
+        for _ in range(20):
+            sched.step()
+        assert (eng.pos == 0).all()
+
+
+def test_capacity_and_free_slots_exclude_draining(rt):
+    """Regression: a draining replica reported 0 free slots while capacity
+    still counted its slots, so `repro ps` overstated headroom by a full
+    replica during blue/green rollovers. The two properties must agree on
+    which replicas they count."""
+    pod = Pod(rt, "stable", replicas=2, n_slots=3, max_len=56)
+    assert pod.capacity == 6 and pod.free_slots == 6
+    pod.engines[0].draining = True
+    assert pod.capacity == 3 and pod.free_slots == 3
+    st = pod.status()
+    assert st["capacity"] == 3 and st["free_slots"] == 3
+    pod.engines[0].draining = False
+    pod.engines[0].stopped = True
+    assert pod.capacity == 3 and pod.free_slots == 3
+
+
+def test_prefill_executable_count_exposed_and_bounded(rt):
+    """`_prefills` holds one compiled executable per distinct bucket.
+    status() must surface the count, and pow2-bucketed archs must stay
+    bounded where exact-prefill archs grow per distinct prompt length."""
+    counts = {}
+    # mamba's SSD prefill needs lengths divisible by ssm_chunk (8 in smoke)
+    for arch, lens in (("llama3.2-3b-smoke", [3, 5, 7, 9]),
+                       ("mamba2-2.7b-smoke", [8, 16, 24, 32])):
+        tag = f"pf-{arch}"
+        rt.build(IMAGEFILE.replace("llama3.2-3b-smoke", arch), tag=tag)
+        pod = Pod(rt, tag, replicas=1, n_slots=2, max_len=56)
+        sched = ContinuousScheduler(pod)
+        sched.submit([GenRequest(rid=i, prompt=np.arange(1, n + 1),
+                                 max_new_tokens=2)
+                      for i, n in enumerate(lens)])
+        sched.run(max_ticks=1000)
+        counts[arch] = pod.engines[0].status()["prefill_execs"]
+    # all four lengths share the 16-bucket under pow2 bucketing
+    assert counts["llama3.2-3b-smoke"] == 1
+    # exact-prefill (recurrent cache): one executable per distinct length
+    assert counts["mamba2-2.7b-smoke"] == 4
