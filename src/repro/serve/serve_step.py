@@ -3,9 +3,17 @@ slot-granular variants that power the orchestrator's continuous batching.
 
 ``prefill``      : (params, tokens[, frontend_embeds]) -> (last_logits, cache)
 ``decode``       : (params, cache, tokens (B,1), idx)  -> (logits, new_cache)
-``prefill_slot`` : (params, tokens (1,P), length)      -> (first_tok, cache)
+``prefill_slot`` : (params, tokens (B,P), length[, frontend_embeds, fe_len])
+                                                -> (first_tokens (B,), cache)
 ``decode_slots`` : (params, cache, tokens (B,1), pos (B,))
                                                 -> (next_tokens (B,), cache)
+
+Frontend-embedding archs (musicgen / internvl2) prepend a per-request
+modality prefix: ``prefill_slot`` built with ``frontend_len=F`` takes an
+(B, F, d_model) embedding buffer plus the per-row count of real prefix rows
+and packs [prefix, prompt] contiguously, so the KV cache covers
+prefix+prompt and decode proceeds at absolute positions fe_len+len+t with
+no further frontend involvement.
 
 The slot variants treat the batch dimension as a bank of independent
 *KV-cache slots*: each row is one in-flight request at its own depth
@@ -65,26 +73,49 @@ class ServeStepBuilder:
 
         return decode
 
-    def build_prefill_slot(self, cache_len: int) -> Callable:
-        """Prefill ONE request whose prompt is right-padded to a bucket.
+    def build_prefill_slot(self, cache_len: int,
+                           frontend_len: int = 0) -> Callable:
+        """Prefill request rows whose prompts are right-padded to a bucket.
 
-        tokens: (1, P_bucket); length: scalar int32 count of real tokens.
-        Returns (first_token (1,), cache padded to ``cache_len``).
+        tokens: (B, P_bucket); length: int32 count of real tokens -- a
+        scalar for the orchestrator's one-request-per-prefill path (B=1) or
+        a (B,) vector for the static driver's wave prefill.
+        Returns (first_token (B,), cache padded to ``cache_len``).
+
+        With ``frontend_len`` > 0 the signature gains
+        ``(frontend_embeds (B, F, D), fe_len)``: a modality prefix consumed
+        AHEAD of the token prompt (packed contiguously by Model.forward, so
+        tokens sit at positions fe_len..fe_len+length-1 and the first token
+        is sampled at position fe_len+length-1).
 
         Right padding is causally safe for full attention: pad-position K/V
-        land at positions >= length, which the causal mask hides until the
-        decode loop overwrites them in place. (Ring-buffer and recurrent
-        caches are NOT pad-safe -- callers use exact-length buckets there;
-        see orchestrator.scheduler.SlotEngine.)
+        land at positions >= the real content, which the causal mask hides
+        until the decode loop overwrites them in place. (Ring-buffer and
+        recurrent caches are NOT pad-safe -- callers use exact-length
+        buckets there; see orchestrator.scheduler.SlotEngine.)
         """
         vocab = self.model.cfg.vocab_size
+
+        def _sample_at(logits, last_pos):
+            last = jnp.take_along_axis(
+                logits, last_pos.reshape(-1, 1, 1), axis=1)[:, 0]
+            return greedy_sample(last, vocab)
+
+        if frontend_len:
+            def prefill_slot(params, tokens, length, frontend_embeds, fe_len):
+                logits, cache, _ = self.model.forward(
+                    params, tokens, frontend_embeds=frontend_embeds,
+                    frontend_len=fe_len, collect_cache=True,
+                    cache_len=cache_len)
+                return _sample_at(logits,
+                                  jnp.asarray(fe_len + length - 1)), cache
+
+            return prefill_slot
 
         def prefill_slot(params, tokens, length):
             logits, cache, _ = self.model.forward(
                 params, tokens, collect_cache=True, cache_len=cache_len)
-            last = jnp.take_along_axis(
-                logits, (length - 1)[None, None, None], axis=1)[:, 0]
-            return greedy_sample(last, vocab), cache
+            return _sample_at(logits, jnp.asarray(length - 1)), cache
 
         return prefill_slot
 
@@ -133,21 +164,24 @@ class ServeStepBuilder:
     # -- paged variants (KV in a global page pool; see kernels/paged_attention
     # and orchestrator/page_pool.py) ----------------------------------------
 
-    def build_prefill_slot_paged(self, prompt_len: int,
-                                 page_size: int) -> Callable:
+    def build_prefill_slot_paged(self, prompt_len: int, page_size: int,
+                                 frontend_len: int = 0) -> Callable:
         """prefill_slot whose cache comes back PAGE-MAJOR, ready to scatter
         into the pool: each attention entry is (count, n_kv, n_prompt_pages,
-        page_size, hd) with n_prompt_pages = ceil(prompt_len / page_size).
-        The host writes row j of that tree into physical page
-        ``table[slot, j]`` (one jitted scatter -- see scheduler). Padding
-        rows beyond the true ``length`` carry right-pad garbage; the paged
-        mask hides everything >= length until decode overwrites it."""
-        inner = self.build_prefill_slot(prompt_len)
-        np_ = -(-prompt_len // page_size)
-        pad = np_ * page_size - prompt_len
+        page_size, hd) with n_prompt_pages = ceil((frontend_len +
+        prompt_len) / page_size) -- the frontend prefix occupies the leading
+        cache positions, exactly as in the contiguous layout. The host
+        writes row j of that tree into physical page ``table[slot, j]`` (one
+        jitted scatter -- see scheduler). Padding rows beyond the true
+        content carry right-pad garbage; the paged mask hides everything
+        past the written positions until decode overwrites it."""
+        span = prompt_len + frontend_len
+        inner = self.build_prefill_slot(span, frontend_len)
+        np_ = -(-span // page_size)
+        pad = np_ * page_size - span
 
-        def prefill_slot_paged(params, tokens, length):
-            first, cache = inner(params, tokens, length)
+        def prefill_slot_paged(params, tokens, length, *fe_args):
+            first, cache = inner(params, tokens, length, *fe_args)
 
             def to_pages(e):
                 # (count, 1, S, n_kv, hd) -> (count, n_kv, np_, ps, hd)
