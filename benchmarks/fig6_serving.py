@@ -94,10 +94,12 @@ def run() -> list[tuple[str, float, str]]:
             best = (eng.decode_s, eng.decode_ticks - t0, reqs)
     cont_s, cont_ticks, reqs = best
     cont_tokens = sum(len(r.tokens) for r in reqs)
-    # latency from arrival (the stagger is offered load, not queueing delay)
-    lat = sorted(r.done_tick - max(r.arrival, r.submit_tick) for r in reqs)
-    p50 = lat[len(lat) // 2]
-    p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+    # latency from arrival (the stagger is offered load, not queueing
+    # delay); nearest-rank percentiles shared with serve.py and fig8
+    from repro.orchestrator.telemetry import nearest_rank, request_latencies
+    lat = request_latencies(reqs)
+    p50 = nearest_rank(lat, 50)
+    p99 = nearest_rank(lat, 99)
 
     # -- static baseline: the actual launch/serve.py --mode static driver,
     # best-of-REPS (first call warms prefill/generate through the cache) ----

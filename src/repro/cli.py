@@ -80,19 +80,36 @@ def cmd_ps(rt: Runtime, args) -> int:
                 continue               # mid-write or corrupt; skip, not crash
             if not isinstance(pod, dict):
                 continue
-            reps = pod.get("replicas", [])
-            active = sum(r.get("active", 0) for r in reps)
-            prefills = sum(r.get("prefill_execs", 0) for r in reps)
             phase = pod.get("phase", "-")
             pid = pod.get("pid")
             if pid is not None and not _pid_alive(pid):
                 phase = "exited"        # stale snapshot of a dead process
+            if pod.get("kind") == "router":
+                # the fleet reads as one unit: one router line; member pods
+                # follow as their own records (marked router=<id>)
+                draining = len(pod.get("draining", []))
+                print(f"{pod.get('router', p.stem):26s} "
+                      f"policy={pod.get('policy', '?')} "
+                      f"pods={len(pod.get('pods', []))} "
+                      f"capacity={pod.get('capacity', 0)} "
+                      f"free={pod.get('free_slots', 0)} "
+                      f"pending={pod.get('pending', 0)} "
+                      f"rejected={pod.get('rejected', 0)} "
+                      f"spilled={pod.get('spilled', 0)} "
+                      f"draining={draining} {phase:8s}")
+                continue
+            reps = pod.get("replicas", [])
+            active = sum(r.get("active", 0) for r in reps)
+            prefills = sum(r.get("prefill_execs", 0) for r in reps)
+            router = pod.get("router")
             print(f"{pod.get('pod', p.stem):26s} "
                   f"image={pod.get('image', '?')} "
                   f"replicas={len(reps)} capacity={pod.get('capacity', 0)} "
                   f"free={pod.get('free_slots', 0)} "
-                  f"active={active} prefills={prefills} {phase:8s} "
-                  f"ref={pod.get('ref') or '-'}")
+                  f"active={active} prefills={prefills} "
+                  f"rejected={pod.get('rejected', 0)} {phase:8s} "
+                  f"ref={pod.get('ref') or '-'}"
+                  + (f" router={router}" if router else ""))
     return 0
 
 
@@ -113,6 +130,7 @@ def cmd_serve(rt: Runtime, args) -> int:
     argv = ["--image", args.ref, "--root", str(rt.root),
             "--mode", args.mode,
             "--replicas", str(args.replicas), "--slots", str(args.slots),
+            "--pods", str(args.pods), "--policy", args.policy,
             "--requests", str(args.requests), "--gen", str(args.gen),
             "--prompt-len", str(args.prompt_len), "--seed", str(args.seed),
             "--fairness-cap", str(args.fairness_cap),
@@ -167,6 +185,11 @@ def main(argv=None) -> int:
     p.add_argument("--mode", choices=("continuous", "static"),
                    default="continuous")
     p.add_argument("--replicas", type=int, default=2)
+    p.add_argument("--pods", type=int, default=1,
+                   help="pods behind a PodRouter (>1 = multi-pod fleet)")
+    p.add_argument("--policy", choices=("shortest-queue", "consistent-hash"),
+                   default="shortest-queue",
+                   help="router placement policy (--pods > 1)")
     p.add_argument("--slots", type=int, default=8)
     p.add_argument("--requests", type=int, default=32)
     p.add_argument("--prompt-len", type=int, default=64)

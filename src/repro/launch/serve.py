@@ -6,6 +6,10 @@ variable-length requests via continuous batching:
   PYTHONPATH=src python -m repro.launch.serve --image <tag|Imagefile> \
       --replicas 2 --slots 8 --requests 32 --gen 32
 
+Multi-pod (--pods N): the same trace served by a PodRouter fronting N
+pods (each its own scheduler + queue), with --policy shortest-queue
+(load-aware, default) or consistent-hash (rid session affinity).
+
 Static (--mode static): the pre-orchestrator baseline -- one fixed batch,
 prefill + scanned greedy decode -- kept as the fig6 comparison point. Both
 modes compile through the Container serve path (explicit in/out shardings +
@@ -76,40 +80,57 @@ def _arch_config(rt: Runtime, image):
     return get_config(cfg["arch"]["name"], **cfg["arch"].get("overrides", {}))
 
 
-def serve_continuous(rt: Runtime, image, args) -> dict:
-    from repro.orchestrator import ContinuousScheduler, Pod
-    cfg = _arch_config(rt, image)
+def _make_pod(rt: Runtime, image, args, cfg):
+    """One serving pod sized for the trace (shared by every fleet member)."""
+    from repro.orchestrator import Pod
     # per-request span: frontend prefix + prompt + gen + chunk-overshoot
     max_len = _frontend_width(cfg) + args.prompt_len + args.gen + 8
     if getattr(args, "paged", False):
         # paged: max_len is only the per-request span; double it so long
         # requests fit, and size the pool to the contiguous bank's HBM
-        pod = Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
-                  max_len=2 * max_len, platform=args.platform, seed=args.seed,
-                  paged=True, page_size=args.page_size,
-                  n_pages=args.slots * (-(-max_len // args.page_size)) + 1)
+        return Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
+                   max_len=2 * max_len, platform=args.platform,
+                   seed=args.seed, paged=True, page_size=args.page_size,
+                   n_pages=args.slots * (-(-max_len // args.page_size)) + 1)
+    return Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
+               max_len=max_len, platform=args.platform, seed=args.seed)
+
+
+def serve_continuous(rt: Runtime, image, args) -> dict:
+    from repro.orchestrator import ContinuousScheduler, PodRouter
+    from repro.orchestrator.telemetry import latency_summary
+    cfg = _arch_config(rt, image)
+    n_pods = max(1, int(getattr(args, "pods", 1)))
+    pods = [_make_pod(rt, image, args, cfg) for _ in range(n_pods)]
+    if n_pods > 1:
+        # fleet: one router surface over per-pod schedulers/queues
+        driver = PodRouter(pods,
+                           policy=getattr(args, "policy", "shortest-queue"),
+                           fairness_cap=args.fairness_cap)
     else:
-        pod = Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
-                  max_len=max_len, platform=args.platform, seed=args.seed)
-    sched = ContinuousScheduler(pod, fairness_cap=args.fairness_cap)
+        driver = ContinuousScheduler(pods[0],
+                                     fairness_cap=args.fairness_cap)
     rng = np.random.default_rng(args.seed)
     reqs = _build_requests(args, cfg, rng)
 
     t0 = time.perf_counter()
-    sched.submit(reqs)
-    done = sched.run()
+    driver.submit(reqs)
+    done = driver.run()
     wall = time.perf_counter() - t0
-    pod.write_state(final=True)     # terminal phase: ps stays honest after exit
+    # terminal phase: ps stays honest after exit
+    if n_pods > 1:
+        driver.write_state(final=True)      # also finalizes member pods
+    else:
+        pods[0].write_state(final=True)
 
+    engines = [e for p in pods for e in p.engines]
     toks = sum(len(r.tokens) for r in done)
-    dec_s = sum(e.decode_s for e in pod.engines)
-    pre_s = sum(e.prefill_s for e in pod.engines)
-    ticks = sum(e.decode_ticks for e in pod.engines)
-    # latency from when the request ARRIVED (the trace stagger is offered
-    # load, not serving latency), not from the bulk submit at tick 0
-    lat = sorted(r.done_tick - max(r.arrival, r.submit_tick) for r in done)
+    dec_s = sum(e.decode_s for e in engines)
+    pre_s = sum(e.prefill_s for e in engines)
+    ticks = sum(e.decode_ticks for e in engines)
     out = {
         "mode": "continuous",
+        "pods": n_pods,
         "requests": len(done),
         "tokens": toks,
         "wall_s": wall,
@@ -117,14 +138,21 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
         "prefill_s": pre_s,
         "decode_ticks": ticks,
         "decode_tok_per_s": toks / dec_s if dec_s else 0.0,
-        "p50_latency_ticks": lat[len(lat) // 2] if lat else 0,
-        "p99_latency_ticks": lat[min(len(lat) - 1,
-                                     int(0.99 * len(lat)))] if lat else 0,
+        # nearest-rank percentiles, measured from request ARRIVAL (the
+        # trace stagger is offered load, not serving latency)
+        **latency_summary(done),
         "request_tokens": {r.rid: list(r.tokens) for r in done},
-        "pod": pod.status(),
+        "pod": pods[0].status() if n_pods == 1 else None,
     }
-    print(f"[serve] pod={pod.pod_id} image={pod.image.short_digest} "
-          f"replicas={args.replicas} slots={args.slots}")
+    if n_pods > 1:
+        out["fleet"] = driver.status()
+        print(f"[serve] fleet={driver.router_id} policy={driver.policy} "
+              f"pods={n_pods} image={pods[0].image.short_digest} "
+              f"replicas={args.replicas} slots={args.slots}")
+    else:
+        print(f"[serve] pod={pods[0].pod_id} "
+              f"image={pods[0].image.short_digest} "
+              f"replicas={args.replicas} slots={args.slots}")
     print(f"[serve] {len(done)} requests, {toks} tokens in {wall:.2f}s "
           f"(decode {out['decode_tok_per_s']:.0f} tok/s over {ticks} ticks; "
           f"p50 {out['p50_latency_ticks']} / p99 {out['p99_latency_ticks']} "
@@ -222,6 +250,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--mode", choices=("continuous", "static"),
                     default="continuous")
     ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pods behind a PodRouter (>1 = multi-pod fleet)")
+    ap.add_argument("--policy", choices=("shortest-queue", "consistent-hash"),
+                    default="shortest-queue",
+                    help="router placement policy (--pods > 1)")
     ap.add_argument("--slots", type=int, default=8,
                     help="KV slots per replica (static: the batch size)")
     ap.add_argument("--requests", type=int, default=32)
@@ -237,6 +270,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--root", default=".stevedore")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.mode == "static" and args.pods > 1:
+        # never let a "static fleet" silently serve from one host: the
+        # static baseline has no router tier, and comparing it against an
+        # N-pod continuous run would be N-times biased
+        ap.error("--pods applies to continuous mode only "
+                 "(static is the single-host baseline)")
 
     rt = Runtime(args.root)
     # a registry ref is passed through as a ref so the Pod stays

@@ -13,20 +13,32 @@ global page pool (``PagePool`` + the Pallas paged-attention kernel):
 admission is then bounded by pool pressure instead of per-slot ``max_len``
 slabs, so short requests stop stranding memory and long ones stop being
 rejected by the slab ceiling.
+
+``PodRouter`` scales past one pod: N pods (each with its own scheduler and
+queue) behind one submit()/step()/run() surface, with shortest-queue or
+consistent-hash placement, spillover-before-reject, and router-level
+drains -- ``RollingDeployer`` accepts a router and rolls the fleet
+pod-by-pod at >= N-1 pods of capacity.
 """
 
 from repro.orchestrator.deployer import RollingDeployer
 from repro.orchestrator.page_pool import PagePool
 from repro.orchestrator.pod import Pod
 from repro.orchestrator.request_queue import GenRequest, RequestQueue
+from repro.orchestrator.router import PLACEMENT_POLICIES, PodRouter
 from repro.orchestrator.scheduler import ContinuousScheduler, SlotEngine
+from repro.orchestrator.telemetry import latency_summary, nearest_rank
 
 __all__ = [
     "GenRequest",
     "RequestQueue",
     "PagePool",
     "Pod",
+    "PodRouter",
+    "PLACEMENT_POLICIES",
     "SlotEngine",
     "ContinuousScheduler",
     "RollingDeployer",
+    "latency_summary",
+    "nearest_rank",
 ]

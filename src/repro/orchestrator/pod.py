@@ -48,6 +48,13 @@ class Pod:
         self.page_size = int(page_size)
         self.n_pages = n_pages
         self.pod_id = f"pod-{uuid.uuid4().hex[:8]}"
+        # pod-lifetime rejection counter, incremented by whichever scheduler
+        # fronts this pod (a burst of rejections is a served-badly signal
+        # `repro ps` must show even when no slot occupancy changed)
+        self.rejected = 0
+        # router tier membership: PodRouter stamps its id here so `ps` can
+        # read a fleet as one unit; None = standalone pod
+        self.router: str | None = None
         self._params: dict[str, object] = {}   # image digest -> shared tree
         self.engines: list[SlotEngine] = [
             self.make_engine(self.image, i) for i in range(replicas)]
@@ -100,6 +107,8 @@ class Pod:
             "image": self.image.short_digest,
             "capacity": self.capacity,
             "free_slots": self.free_slots,
+            "rejected": self.rejected,
+            "router": self.router,
             "phase": ("serving" if any(e.active for e in self.engines)
                       else "idle"),
             "pid": os.getpid(),     # lets `ps` tell live fleets from dead

@@ -39,6 +39,11 @@ class GenRequest:
     slot: int | None = None
     finish_reason: str | None = None    # eos | length | oversized
     error: str | None = None            # human-readable rejection reason
+    # router-tier placement record (owned by PodRouter): which pod the
+    # request was routed to, and whether that was a spillover re-route
+    # (the policy's preferred pod could never fit it, another pod could)
+    pod: str | None = None
+    spilled: bool = False
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)

@@ -1,0 +1,319 @@
+"""Router tier: one submit()/step()/run() surface over N Pods.
+
+One Pod is one host's replicas; the paper's fleet story (Benedicic et al.'s
+Shifter deployments, the HPE adaptive-containerization survey) needs many.
+``PodRouter`` fronts N Pods -- each with its own ``ContinuousScheduler``
+and ``RequestQueue`` -- behind the same interface a single scheduler
+exposes, so drivers, benchmarks and the deployer scale from one pod to a
+fleet without changing shape.
+
+Placement is pluggable:
+
+* ``shortest-queue`` (default): route to the pod with the least
+  outstanding decode work (committed tokens not yet finished), tie-broken
+  by pod order -- load-aware, keeps the fleet evenly packed.
+* ``consistent-hash``: hash the request id onto a static ring of virtual
+  nodes (session affinity -- a future prefix cache can rely on a rid
+  family landing on one pod). The ring never mutates: draining a pod just
+  makes the walk skip it, so ONLY the drained pod's keys move (to their
+  ring successors) and they return home when it un-drains.
+
+Both policies spill before they reject: if no engine in the preferred pod
+can EVER fit a request (slab / page-table span / pool / frontend
+mismatch), the router walks the remaining preference order and re-routes
+-- draining pods included, as a last resort, so a request feasible only
+on a pod that is transiently draining waits for it instead of dying. A
+request is rejected only when EVERY pod agrees it is infeasible, with the
+reasons aggregated across the fleet.
+
+Draining a pod at the router (``drain_pod``) is the fleet-deployer hook:
+new traffic routes around it, its queued + in-flight work finishes, and
+fleet ``capacity`` drops by exactly that pod -- never below N-1 pods
+during a rolling upgrade.
+
+Router state persists next to pod state (``<root>/pods/<router_id>.json``,
+``"kind": "router"``) so ``repro ps`` reads a fleet as one unit.
+"""
+
+from __future__ import annotations
+
+import bisect
+import hashlib
+import json
+import os
+import uuid
+from pathlib import Path
+from typing import Iterable
+
+from repro.orchestrator.pod import Pod
+from repro.orchestrator.request_queue import GenRequest
+from repro.orchestrator.scheduler import ContinuousScheduler
+
+PLACEMENT_POLICIES = ("shortest-queue", "consistent-hash")
+
+
+def _hash64(key: str) -> int:
+    # md5, not hash(): placement must be stable across processes (PYTHONHASHSEED)
+    return int.from_bytes(hashlib.md5(key.encode()).digest()[:8], "big")
+
+
+class PodRouter:
+    STATE_EVERY = 8     # min ticks between router-state file refreshes
+
+    def __init__(self, pods: Iterable[Pod], *,
+                 policy: str = "shortest-queue", fairness_cap: int = 4,
+                 vnodes: int = 64):
+        self.pods: list[Pod] = list(pods)
+        if not self.pods:
+            raise ValueError("a PodRouter needs at least one pod")
+        if policy not in PLACEMENT_POLICIES:
+            raise ValueError(
+                f"unknown placement policy {policy!r}; "
+                f"choose from {PLACEMENT_POLICIES}")
+        self.policy = policy
+        self.router_id = f"router-{uuid.uuid4().hex[:8]}"
+        self.runtime = self.pods[0].runtime
+        # one scheduler+queue per pod: admission stays FIFO *within* a pod
+        # (a pod's admission order is a subsequence of router submission
+        # order), and pods tick independently -- the cross-host layout
+        self.schedulers: list[ContinuousScheduler] = [
+            ContinuousScheduler(p, fairness_cap=fairness_cap)
+            for p in self.pods]
+        self._sched = {p.pod_id: s
+                       for p, s in zip(self.pods, self.schedulers)}
+        # static hash ring: vnodes points per pod so key movement on drain
+        # is ~1/N even with few pods
+        ring = [(_hash64(f"{p.pod_id}#{v}"), p)
+                for p in self.pods for v in range(vnodes)]
+        self._ring = sorted(ring, key=lambda t: t[0])
+        self._ring_keys = [h for h, _ in self._ring]
+        self._draining: set[str] = set()
+        self.tick = 0
+        self._state_tick = -self.STATE_EVERY
+        self.completed: list[GenRequest] = []
+        self.rejected: list[GenRequest] = []    # router-level (no pod fits)
+        self.routed = 0
+        self.spilled = 0
+        # incremental outstanding-work ledger (tokens committed, not yet
+        # finished) so shortest-queue placement is O(P log P) per request
+        # instead of rescanning every queue and slot bank
+        self._outstanding = {p.pod_id: 0 for p in self.pods}
+        self._rejected_seen = [0] * len(self.schedulers)
+        for p in self.pods:
+            p.router = self.router_id
+            p.write_state()
+        self.write_state()
+
+    # -- placement -----------------------------------------------------------
+    def is_draining(self, pod: Pod) -> bool:
+        return pod.pod_id in self._draining
+
+    def load(self, pod: Pod) -> int:
+        """Shortest-queue metric: outstanding decode WORK committed to the
+        pod, in tokens (budgets routed there and not yet finished). A plain
+        request count is blind to budgets (a trace whose long requests
+        correlate with submit order then piles every long request onto one
+        pod); weighting by tokens keeps the backlog balanced. Maintained
+        incrementally -- credited at routing, debited at completion/
+        rejection -- so placement never rescans queues or slot banks."""
+        return self._outstanding[pod.pod_id]
+
+    def scheduler_for(self, pod: Pod) -> ContinuousScheduler:
+        return self._sched[pod.pod_id]
+
+    def _candidates(self, req: GenRequest) -> list[Pod]:
+        """Every pod in placement-preference order for ``req``: live pods
+        by policy first, draining pods as a LAST resort -- a request
+        feasible only on a pod that is transiently draining (a rolling
+        upgrade) waits in its queue rather than being terminally rejected.
+        The first entry is the policy's choice; the rest spill over."""
+        if self.policy == "consistent-hash":
+            i = bisect.bisect_right(self._ring_keys, _hash64(f"rid:{req.rid}"))
+            order, seen = [], set()
+            for k in range(len(self._ring)):
+                p = self._ring[(i + k) % len(self._ring)][1]
+                if p.pod_id not in seen:
+                    seen.add(p.pod_id)
+                    order.append(p)
+                    if len(order) == len(self.pods):
+                        break
+        else:
+            order = sorted(self.pods, key=lambda p: (self.load(p),
+                                                     self.pods.index(p)))
+        return ([p for p in order if p.pod_id not in self._draining]
+                + [p for p in order if p.pod_id in self._draining])
+
+    def _first_fit(self, req: GenRequest, order: list[Pod]) -> Pod | None:
+        return next(
+            (p for p in order if any(e.fits(req) for e in p.engines)), None)
+
+    def place(self, req: GenRequest) -> Pod | None:
+        """The pod ``req`` would route to right now (spillover applied);
+        None if no pod can ever fit it. Pure query -- no submission."""
+        return self._first_fit(req, self._candidates(req))
+
+    def submit(self, reqs: Iterable[GenRequest] | GenRequest) -> None:
+        if isinstance(reqs, GenRequest):
+            reqs = [reqs]
+        rejected_before = len(self.rejected)
+        for req in reqs:
+            order = self._candidates(req)
+            chosen = self._first_fit(req, order)
+            if chosen is None:
+                # EVERY pod agrees (draining ones included): infeasible
+                # fleet-wide. Reject at the router -- never enqueue a
+                # request that can only stall -- with the per-engine
+                # reasons aggregated across pods.
+                req.state, req.finish_reason = "rejected", "oversized"
+                reasons = sorted({e.reject_reason(req)
+                                  for p in order for e in p.engines})
+                req.error = ("; ".join(reasons) if reasons
+                             else "router has no pods")
+                req.done_tick = self.tick
+                self.rejected.append(req)
+                continue
+            req.spilled = chosen is not order[0]
+            self.spilled += int(req.spilled)
+            req.pod = chosen.pod_id
+            self.routed += 1
+            self._outstanding[chosen.pod_id] += req.max_new_tokens
+            self._sched[chosen.pod_id].submit(req)
+        if len(self.rejected) != rejected_before:
+            # router-level rejections happen BETWEEN ticks (submit time),
+            # so the step() throttle would never see them: one refresh per
+            # rejecting submit batch keeps `repro ps` honest
+            self.write_state()
+
+    # -- drain control (the fleet-deployer hook) -----------------------------
+    def drain_pod(self, pod: Pod) -> None:
+        """Route new traffic around ``pod``. Already-queued and in-flight
+        requests on it still run to completion via its own scheduler."""
+        self._draining.add(pod.pod_id)
+        self.write_state()
+
+    def undrain_pod(self, pod: Pod) -> None:
+        self._draining.discard(pod.pod_id)
+        self.write_state()
+
+    # -- the global tick -----------------------------------------------------
+    def step(self) -> list[GenRequest]:
+        """One fleet tick: every pod's scheduler advances once. Pods are
+        independent hosts -- a tick is the lockstep abstraction of them
+        decoding concurrently, so fleet throughput is tokens per ROUTER
+        tick (what fig8 measures)."""
+        done: list[GenRequest] = []
+        rejected = admitted = 0
+        for i, s in enumerate(self.schedulers):
+            adm0 = s.queue.admitted
+            done.extend(s.step())
+            admitted += s.queue.admitted - adm0
+            # debit post-placement scheduler rejections from the ledger
+            # (rare: geometry changed under a routed request, e.g. upgrade)
+            for req in s.rejected[self._rejected_seen[i]:]:
+                if req.pod in self._outstanding:
+                    self._outstanding[req.pod] -= req.max_new_tokens
+                rejected += 1
+            self._rejected_seen[i] = len(s.rejected)
+        for req in done:
+            # guard: a request submitted to a member scheduler directly
+            # (bypassing the router) was never credited to the ledger
+            if req.pod in self._outstanding:
+                self._outstanding[req.pod] -= req.max_new_tokens
+        self.completed.extend(done)
+        self.tick += 1
+        # same refresh rule the pod scheduler follows (admissions count:
+        # a saturated fleet must not read as idle in `repro ps`)
+        if (done or admitted or rejected) and (
+                self.tick - self._state_tick >= self.STATE_EVERY):
+            self.write_state()
+            self._state_tick = self.tick
+        return done
+
+    @property
+    def busy(self) -> bool:
+        return any(s.busy for s in self.schedulers)
+
+    def run(self, max_ticks: int | None = None) -> list[GenRequest]:
+        start = self.tick
+        while self.busy:
+            if max_ticks is not None and self.tick - start >= max_ticks:
+                break
+            self.step()
+        # final snapshots for the router AND every member pod: step() calls
+        # the schedulers' step directly, so nothing else flushes a pod's
+        # state after its last throttled write
+        self.write_state()
+        for p in self.pods:
+            p.write_state()
+        return self.completed
+
+    # -- fleet accounting ----------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Admissible slots fleet-wide; drained pods contribute nothing
+        (the N-1 invariant the deployer tests pin)."""
+        return sum(p.capacity for p in self.pods
+                   if p.pod_id not in self._draining)
+
+    @property
+    def free_slots(self) -> int:
+        return sum(p.free_slots for p in self.pods
+                   if p.pod_id not in self._draining)
+
+    @property
+    def pending(self) -> int:
+        return sum(s.queue.pending for s in self.schedulers)
+
+    @property
+    def rejected_total(self) -> int:
+        """Router-level (no pod fits at placement) + per-pod scheduler
+        rejections (post-placement geometry changes, e.g. an upgrade)."""
+        return (len(self.rejected)
+                + sum(len(s.rejected) for s in self.schedulers))
+
+    def status(self) -> dict:
+        return {
+            "kind": "router",
+            "router": self.router_id,
+            "policy": self.policy,
+            "pods": [p.pod_id for p in self.pods],
+            "draining": sorted(self._draining),
+            "capacity": self.capacity,
+            "free_slots": self.free_slots,
+            "pending": self.pending,
+            "routed": self.routed,
+            "spilled": self.spilled,
+            "completed": len(self.completed),
+            "rejected": self.rejected_total,
+            "pid": os.getpid(),
+            "members": [{
+                "pod": p.pod_id,
+                "image": p.image.short_digest,
+                "capacity": p.capacity,
+                "free_slots": p.free_slots,
+                "pending": self._sched[p.pod_id].queue.pending,
+                "active": sum(len(e.active) for e in p.engines),
+                "rejected": p.rejected,
+                "draining": p.pod_id in self._draining,
+            } for p in self.pods],
+        }
+
+    def write_state(self, final: bool = False) -> Path:
+        """Same dir + atomic protocol as ``Pod.write_state`` so ``repro
+        ps`` discovers routers and pods in one glob."""
+        d = Path(self.runtime.root) / "pods"
+        d.mkdir(parents=True, exist_ok=True)
+        p = d / f"{self.router_id}.json"
+        status = self.status()
+        status["phase"] = ("exited" if final
+                          else "serving" if any(
+                              e.active for pod in self.pods
+                              for e in pod.engines)
+                          else "idle")
+        if final:
+            for pod in self.pods:
+                pod.write_state(final=True)
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(json.dumps(status, indent=2))
+        os.replace(tmp, p)
+        return p

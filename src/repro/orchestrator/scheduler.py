@@ -410,27 +410,36 @@ class ContinuousScheduler:
         for r in reqs:
             self.queue.submit(r, self.tick)
 
+    def reject(self, req: GenRequest) -> None:
+        """Terminal rejection: record the per-engine reasons and count it
+        where ``Pod.status`` / ``repro ps`` can see it."""
+        req.state, req.finish_reason = "rejected", "oversized"
+        req.error = "; ".join(sorted(
+            {e.reject_reason(req) for e in self.pod.engines}))
+        req.done_tick = self.tick
+        self.rejected.append(req)
+        self.pod.rejected += 1
+
     # -- one global tick ------------------------------------------------------
     def step(self) -> list[GenRequest]:
         done: list[GenRequest] = []
         # admission: FIFO across the pod, capped prefills per tick
-        admitted = 0
+        admitted = rejected = 0
         while admitted < self.fairness_cap and self.queue.has_ready(self.tick):
+            req = self.queue.peek_ready(self.tick)
+            # permanent infeasibility is screened BEFORE the free-slot gate:
+            # a request that exceeds every engine's slab / page-table span /
+            # pool can NEVER run, so it must be rejected even when all slots
+            # are busy -- gating on occupancy let an un-servable head stall
+            # every feasible request behind it until a slot freed
+            if not any(e.fits(req) for e in self.pod.engines):
+                self.queue.pop_ready(self.tick)
+                self.reject(req)
+                rejected += 1
+                continue
             engines = [e for e in self.pod.engines if e.has_free()]
             if not engines:
                 break
-            req = self.queue.peek_ready(self.tick)
-            if not any(e.fits(req) for e in self.pod.engines):
-                # permanently infeasible (exceeds every engine's slab /
-                # page-table span / pool): reject the one request; never
-                # crash a serving fleet
-                self.queue.pop_ready(self.tick)
-                req.state, req.finish_reason = "rejected", "oversized"
-                req.error = "; ".join(sorted(
-                    {e.reject_reason(req) for e in self.pod.engines}))
-                req.done_tick = self.tick
-                self.rejected.append(req)
-                continue
             ready = [e for e in engines if e.can_start(req)]
             if not ready:
                 # pool-pressure backpressure (paged): feasible but no pages
@@ -452,8 +461,10 @@ class ContinuousScheduler:
         self.completed.extend(done)
         self.tick += 1
         # keep `repro ps` honest without putting file I/O in every tick:
-        # refresh on occupancy changes, at most once per STATE_EVERY ticks
-        if (admitted or done) and (
+        # refresh on occupancy OR rejection changes, at most once per
+        # STATE_EVERY ticks -- a burst of pure rejections used to leave the
+        # state file (queue depth, rejected counter) stale indefinitely
+        if (admitted or done or rejected) and (
                 self.tick - self._state_tick >= self.STATE_EVERY):
             self.pod.write_state()
             self._state_tick = self.tick
@@ -474,15 +485,20 @@ class ContinuousScheduler:
         self.pod.write_state()      # final snapshot (throttle may have skipped)
         return self.completed
 
-    def drain(self, engine: SlotEngine, max_ticks: int = 100_000) -> int:
-        """Tick the pod until ``engine`` has no in-flight requests. The
-        engine is marked draining (no new admissions) but its active
-        requests run to completion; other engines keep serving."""
+    def drain(self, engine: SlotEngine, max_ticks: int = 100_000,
+              tick_fn=None) -> int:
+        """Tick until ``engine`` has no in-flight requests. The engine is
+        marked draining (no new admissions) but its active requests run to
+        completion; other engines keep serving. ``tick_fn`` overrides the
+        tick driver -- the fleet deployer passes ``PodRouter.step`` so the
+        OTHER pods keep admitting and decoding while this one drains."""
         engine.draining = True
-        start = self.tick
-        while engine.active and self.tick - start < max_ticks:
-            self.step()
+        tick_fn = tick_fn or self.step
+        ticks = 0
+        while engine.active and ticks < max_ticks:
+            tick_fn()
+            ticks += 1
         if engine.active:
             raise RuntimeError(
                 f"drain of {engine.name} did not converge in {max_ticks} ticks")
-        return self.tick - start
+        return ticks

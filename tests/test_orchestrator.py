@@ -3,6 +3,8 @@ with the lockstep path, EOS early exit, rolling-upgrade drains, and the
 paged-KV serving path (pool-pressure admission, lockstep parity with the
 contiguous scheduler, long-request completion past the old slab ceiling)."""
 
+import json
+
 import numpy as np
 import pytest
 
@@ -381,6 +383,84 @@ def test_pod_state_visible_to_ps(rt):
     assert rec["capacity"] == 2
     assert rec["free_slots"] == 2
     assert rec["replicas"][0]["image"] == pod.image.short_digest
+
+
+# ---------------------------------------------------------------------------
+# admission / telemetry regressions
+# ---------------------------------------------------------------------------
+
+def test_oversized_head_rejected_under_full_load(rt):
+    """Regression: step() broke on `not engines` BEFORE the infeasibility
+    check, so with every slot busy a permanently un-servable FIFO head was
+    never rejected -- it stalled every feasible request behind it until a
+    slot freed. The infeasible head must be rejected the tick it surfaces,
+    occupancy notwithstanding."""
+    pod = Pod(rt, "stable", replicas=1, n_slots=1, max_len=64)
+    eng = pod.engines[0]
+    sched = ContinuousScheduler(pod)
+    hog = GenRequest(rid=0, prompt=np.arange(1, 5), max_new_tokens=40)
+    sched.submit(hog)
+    sched.step()
+    assert len(eng.active) == 1 and not eng.has_free()      # full load
+    bad = GenRequest(rid=1, prompt=np.arange(1, 41), max_new_tokens=40)
+    ok = GenRequest(rid=2, prompt=np.arange(1, 7), max_new_tokens=4)
+    sched.submit([bad, ok])
+    sched.step()
+    # rejected IMMEDIATELY -- the hog is still decoding, no slot ever freed
+    assert hog.state == "running"
+    assert bad.state == "rejected" and bad.finish_reason == "oversized"
+    assert sched.rejected == [bad] and pod.rejected == 1
+    # and the feasible request behind it is no longer stalled: it admits
+    # as soon as the slot frees, not after
+    sched.run(max_ticks=1000)
+    assert hog.state == "done" and len(hog.tokens) == 40
+    assert ok.state == "done" and len(ok.tokens) == 4
+    assert ok.admit_tick <= hog.done_tick + 1
+
+
+def test_rejection_burst_refreshes_pod_state(rt):
+    """Regression: the pod-state throttle fired only on (admitted or done),
+    so a burst of pure rejections left the state file -- queue depth and
+    the rejected counter -- stale until the next slot event. Rejections
+    must refresh the file, and Pod.status() must surface the counter."""
+    pod = Pod(rt, "stable", replicas=1, n_slots=1, max_len=96)
+    sched = ContinuousScheduler(pod)
+    hog = GenRequest(rid=0, prompt=np.arange(1, 5), max_new_tokens=80)
+    sched.submit(hog)
+    sched.step()                            # admit; state written this tick
+    # idle past the throttle window: no admissions/completions => no writes
+    for _ in range(ContinuousScheduler.STATE_EVERY + 1):
+        sched.step()
+    state_path = pod.runtime.root / "pods" / f"{pod.pod_id}.json"
+    assert json.loads(state_path.read_text())["rejected"] == 0
+    # a pure-rejection burst while the only slot stays busy
+    burst = [GenRequest(rid=10 + i, prompt=np.arange(1, 41),
+                        max_new_tokens=80) for i in range(3)]
+    sched.submit(burst)
+    sched.step()
+    assert all(r.state == "rejected" for r in burst)
+    assert hog.state == "running"           # no admitted/done this tick
+    rec = json.loads(state_path.read_text())
+    assert rec["rejected"] == 3             # file refreshed by rejections
+    assert pod.status()["rejected"] == 3
+    sched.run(max_ticks=1000)
+    assert hog.state == "done"
+
+
+def test_nearest_rank_percentiles():
+    """Nearest-rank on known distributions: p99 of n<=100 is NOT the max,
+    and the even-n median is the lower-middle rank, not the upper."""
+    from repro.orchestrator.telemetry import nearest_rank
+    assert nearest_rank(range(1, 101), 99) == 99        # was max (100)
+    assert nearest_rank(range(1, 101), 50) == 50
+    assert nearest_rank(range(1, 101), 100) == 100
+    assert nearest_rank([4, 1, 3, 2], 50) == 2          # was 3 (biased high)
+    assert nearest_rank([1, 2, 3, 4, 5], 50) == 3
+    assert nearest_rank([7], 99) == 7
+    assert nearest_rank([10, 20], 1) == 10              # clamps to rank 1
+    assert nearest_rank([], 99) == 0                    # no completions
+    with pytest.raises(ValueError):
+        nearest_rank([1, 2], 150)
 
 
 # ---------------------------------------------------------------------------

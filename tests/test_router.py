@@ -1,0 +1,314 @@
+"""Router-tier invariants: FIFO preserved per pod under shortest-queue,
+consistent-hash stability across drains, spillover-before-reject, fleet
+rolling upgrades at >= N-1 pods of capacity with zero kills, and
+continuous-vs-static token parity unchanged when the trace is routed."""
+
+import io
+import json
+from contextlib import redirect_stdout
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.runtime import Runtime
+from repro.orchestrator import (
+    GenRequest,
+    Pod,
+    PodRouter,
+    RollingDeployer,
+)
+
+pytestmark = pytest.mark.orchestrator
+
+IMAGEFILE = """
+FROM scratch
+ARCH {arch}
+SHAPE decode_32k seq_len=64 global_batch=4
+MESH local
+PRECISION compute=float32 params=float32
+COLLECTIVES generic
+"""
+
+
+@pytest.fixture(scope="module")
+def rt(tmp_path_factory):
+    rt = Runtime(tmp_path_factory.mktemp("stevedore"))
+    for arch in ("llama3.2-3b-smoke", "musicgen-medium-smoke"):
+        rt.build(IMAGEFILE.format(arch=arch), tag=arch)
+    rt.registry.tag(rt.registry.resolve("llama3.2-3b-smoke"), "stable")
+    return rt
+
+
+def _requests(rng, n, *, base_rid=0, arrive_per_tick=6, max_gen=10):
+    return [
+        GenRequest(rid=base_rid + i,
+                   prompt=rng.integers(0, 256, int(rng.integers(3, 14))),
+                   max_new_tokens=int(rng.integers(2, max_gen)),
+                   arrival=i // arrive_per_tick)
+        for i in range(n)
+    ]
+
+
+def _fleet(rt, n_pods=2, *, policy="shortest-queue", n_slots=2, max_len=56,
+           **kw):
+    pods = [Pod(rt, "stable", replicas=1, n_slots=n_slots, max_len=max_len)
+            for _ in range(n_pods)]
+    return PodRouter(pods, policy=policy, **kw)
+
+
+def _subsequence(sub, full):
+    it = iter(full)
+    return all(x in it for x in sub)
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+def test_shortest_queue_fifo_preserved_per_pod(rt):
+    """Every pod's admission order is a subsequence of router submission
+    order (placement never reorders a pod's share of the trace), and the
+    trace spreads across pods."""
+    router = _fleet(rt, 2)
+    reqs = _requests(np.random.default_rng(0), 18)
+    router.submit(reqs)
+    done = router.run(max_ticks=5000)
+    assert len(done) == 18 and all(r.state == "done" for r in reqs)
+    assert all(len(r.tokens) == r.max_new_tokens for r in reqs)
+    submitted = [r.rid for r in reqs]
+    by_pod = {p.pod_id: s.admission_order
+              for p, s in zip(router.pods, router.schedulers)}
+    assert all(by_pod.values()), "shortest-queue left a pod idle"
+    for order in by_pod.values():
+        assert _subsequence(order, submitted)
+    # the two pods partition the trace
+    assert sorted(x for o in by_pod.values() for x in o) == submitted
+
+
+def test_shortest_queue_balances_outstanding_work(rt):
+    """Load is measured in outstanding TOKENS, not request count: a trace
+    whose long budgets correlate with submit order must still split its
+    decode work roughly evenly across pods."""
+    router = _fleet(rt, 2, n_slots=3)
+    # every 2nd request is long -- a count-based metric alternates pods and
+    # piles all the long ones onto pod 1
+    reqs = [GenRequest(rid=i, prompt=np.arange(1, 6),
+                       max_new_tokens=(20 if i % 2 else 2))
+            for i in range(12)]
+    router.submit(reqs)
+    work = {p.pod_id: sum(r.max_new_tokens for r in reqs
+                          if r.pod == p.pod_id) for p in router.pods}
+    lo, hi = sorted(work.values())
+    assert hi - lo <= 20, work       # within one long request of even
+    router.run(max_ticks=5000)
+    assert all(r.state == "done" for r in reqs)
+
+
+def test_consistent_hash_stable_under_drain(rt):
+    """Draining a pod moves ONLY that pod's keys (to ring successors);
+    un-draining brings them home. Other keys never move."""
+    router = _fleet(rt, 3, policy="consistent-hash")
+    probes = [GenRequest(rid=i, prompt=np.arange(4), max_new_tokens=2)
+              for i in range(60)]
+    before = {q.rid: router.place(q).pod_id for q in probes}
+    assert len(set(before.values())) == 3   # vnodes spread the keyspace
+    victim = router.pods[1]
+    router.drain_pod(victim)
+    during = {q.rid: router.place(q).pod_id for q in probes}
+    moved = {r for r in before if before[r] != during[r]}
+    assert moved == {r for r in before if before[r] == victim.pod_id}
+    assert all(during[r] != victim.pod_id for r in moved)
+    router.undrain_pod(victim)
+    assert {q.rid: router.place(q).pod_id for q in probes} == before
+
+
+def test_consistent_hash_serves_and_respects_placement(rt):
+    """Routed requests land on the pod place() predicted (session
+    affinity), and the fleet completes the trace."""
+    router = _fleet(rt, 3, policy="consistent-hash")
+    reqs = _requests(np.random.default_rng(1), 15, base_rid=500)
+    predicted = {r.rid: router.place(r).pod_id for r in reqs}
+    router.submit(reqs)
+    assert {r.rid: r.pod for r in reqs} == predicted
+    router.run(max_ticks=5000)
+    assert all(r.state == "done" for r in reqs)
+
+
+def test_drained_pod_gets_no_new_traffic(rt):
+    router = _fleet(rt, 2)
+    router.drain_pod(router.pods[0])
+    reqs = _requests(np.random.default_rng(2), 6, base_rid=700)
+    router.submit(reqs)
+    assert all(r.pod == router.pods[1].pod_id for r in reqs)
+    assert router.capacity == router.pods[1].capacity
+    router.undrain_pod(router.pods[0])
+    router.run(max_ticks=5000)
+    assert all(r.state == "done" for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# spillover / rejection
+# ---------------------------------------------------------------------------
+
+def test_spillover_before_reject(rt):
+    """A request the preferred pod can NEVER fit re-routes to a pod that
+    can -- for both policies -- and is marked spilled."""
+    for policy in ("shortest-queue", "consistent-hash"):
+        small = Pod(rt, "stable", replicas=1, n_slots=2, max_len=24)
+        big = Pod(rt, "stable", replicas=1, n_slots=2, max_len=96)
+        router = PodRouter([small, big], policy=policy)
+        # long requests: span 20+20+chunk > 24, fits 96. Probe many rids so
+        # at least one hashes to the small pod under consistent-hash.
+        longs = [GenRequest(rid=i, prompt=np.arange(1, 21),
+                            max_new_tokens=20) for i in range(10)]
+        prefer_small = [r for r in longs
+                        if router._candidates(r)[0] is small]
+        assert prefer_small, "no probe preferred the small pod"
+        router.submit(longs)
+        assert all(r.pod == big.pod_id for r in longs)
+        assert all(r.spilled for r in prefer_small)
+        assert router.spilled >= len(prefer_small)
+        router.run(max_ticks=5000)
+        assert all(r.state == "done" and len(r.tokens) == 20 for r in longs)
+
+
+def test_feasible_only_on_draining_pod_waits_not_rejected(rt):
+    """A request only the DRAINING pod can ever fit is routed there (last
+    resort) instead of being terminally rejected during a transient drain
+    -- it waits in that pod's queue and completes."""
+    small = Pod(rt, "stable", replicas=1, n_slots=2, max_len=24)
+    big = Pod(rt, "stable", replicas=1, n_slots=2, max_len=96)
+    router = PodRouter([small, big])
+    router.drain_pod(big)
+    long = GenRequest(rid=0, prompt=np.arange(1, 21), max_new_tokens=20)
+    ok = GenRequest(rid=1, prompt=np.arange(1, 5), max_new_tokens=2)
+    router.submit([long, ok])
+    assert long.state == "queued" and long.pod == big.pod_id
+    assert ok.pod == small.pod_id       # live pods still preferred
+    assert router.rejected_total == 0
+    router.undrain_pod(big)
+    router.run(max_ticks=5000)
+    assert long.state == "done" and len(long.tokens) == 20
+
+
+def test_rejected_only_when_every_pod_agrees(rt):
+    """Fleet-wide infeasibility is the ONLY router rejection: the error
+    aggregates per-pod reasons and the fleet keeps serving."""
+    small = Pod(rt, "stable", replicas=1, n_slots=2, max_len=24)
+    big = Pod(rt, "stable", replicas=1, n_slots=2, max_len=56)
+    router = PodRouter([small, big])
+    huge = GenRequest(rid=0, prompt=np.arange(1, 41), max_new_tokens=40)
+    ok = GenRequest(rid=1, prompt=np.arange(1, 7), max_new_tokens=4)
+    router.submit([huge, ok])
+    assert huge.state == "rejected" and huge.finish_reason == "oversized"
+    assert "slot capacity" in huge.error
+    assert huge in router.rejected and router.rejected_total == 1
+    # submit-time rejections happen BETWEEN ticks: the router state file
+    # must reflect them immediately, not after the next slot event
+    rec = json.loads(
+        (rt.root / "pods" / f"{router.router_id}.json").read_text())
+    assert rec["rejected"] == 1
+    router.run(max_ticks=1000)
+    assert ok.state == "done" and len(ok.tokens) == 4
+
+
+# ---------------------------------------------------------------------------
+# fleet rolling upgrade
+# ---------------------------------------------------------------------------
+
+def test_fleet_upgrade_n_minus_1_capacity_zero_kills(rt):
+    """Pod-by-pod roll: capacity never below N-1 pods, nothing killed,
+    non-rolling pods keep completing work, every replica lands on the new
+    digest, and the same router keeps serving afterwards."""
+    pods = [Pod(rt, "stable", replicas=1, n_slots=2, max_len=56)
+            for _ in range(3)]
+    router = PodRouter(pods)
+    old_digest = pods[0].image.digest
+    reqs = [GenRequest(rid=i, prompt=np.arange(1, 5), max_new_tokens=24)
+            for i in range(9)]
+    router.submit(reqs)
+    router.step()
+    assert sum(len(e.active) for p in pods for e in p.engines) > 0
+
+    rt.build(IMAGEFILE.format(arch="llama3.2-3b-smoke") + "LABEL rel=r2\n",
+             tag="stable")
+    done_before = len(router.completed)
+    report = RollingDeployer(router).upgrade()
+    assert report["changed"] and len(report["pods"]) == 3
+    # capacity floor: with one pod drained, the other two stay admissible
+    assert report["capacity_floor"] >= 2 * 2
+    # non-rolling pods kept finishing requests during the roll
+    assert len(router.completed) > done_before
+    router.run(max_ticks=5000)
+    assert all(r.state == "done" and len(r.tokens) == 24 for r in reqs)
+    assert router.rejected_total == 0
+    for p in pods:
+        assert p.image.digest != old_digest
+        for e in p.engines:
+            assert e.container.image.digest == p.image.digest
+            assert not e.draining and not e.stopped
+    assert not router._draining
+    # the upgraded fleet still serves
+    post = _requests(np.random.default_rng(3), 5, base_rid=900)
+    router.submit(post)
+    router.run(max_ticks=5000)
+    assert all(r.state == "done" for r in post)
+    # an IDLE fleet upgrade (instant drains, zero drain ticks) still
+    # records the observed capacity floor, not None
+    rt.build(IMAGEFILE.format(arch="llama3.2-3b-smoke") + "LABEL rel=r3\n",
+             tag="stable")
+    idle = RollingDeployer(router).upgrade()
+    assert idle["changed"] and idle["capacity_floor"] == 2 * 2
+
+
+def test_fleet_state_reads_as_one_unit(rt):
+    """Router state file sits next to pod state (kind=router), members
+    carry the router id, and `repro ps` renders the fleet line."""
+    from repro.cli import main as cli_main
+    router = _fleet(rt, 2)
+    state = rt.root / "pods" / f"{router.router_id}.json"
+    assert state.exists()
+    rec = json.loads(state.read_text())
+    assert rec["kind"] == "router" and rec["policy"] == "shortest-queue"
+    assert len(rec["members"]) == 2
+    for p in router.pods:
+        pod_rec = json.loads(
+            (rt.root / "pods" / f"{p.pod_id}.json").read_text())
+        assert pod_rec["router"] == router.router_id
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        assert cli_main(["--root", str(rt.root), "ps"]) == 0
+    out = buf.getvalue()
+    assert router.router_id in out
+    assert f"router={router.router_id}" in out
+
+
+# ---------------------------------------------------------------------------
+# routed serving parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["shortest-queue", "consistent-hash"])
+def test_routed_parity_with_static_on_shared_trace(rt, policy):
+    """Routing must not change tokens: --pods 2 replays the shared
+    frontend trace (tests/test_frontend_serving.py) token-identical to the
+    static baseline and the single-pod continuous path."""
+    from repro.launch.serve import serve_continuous, serve_static
+
+    def args(**kw):
+        a = SimpleNamespace(slots=3, prompt_len=8, gen=6, requests=7, seed=0,
+                            platform=None, replicas=1, fairness_cap=4,
+                            arrive_per_tick=8, paged=False, page_size=8,
+                            pods=1, policy=policy)
+        for k, v in kw.items():
+            setattr(a, k, v)
+        return a
+
+    with redirect_stdout(io.StringIO()):
+        routed = serve_continuous(rt, "musicgen-medium-smoke", args(pods=2))
+        single = serve_continuous(rt, "musicgen-medium-smoke", args())
+        static = serve_static(rt, "musicgen-medium-smoke", args())
+    assert len(routed["request_tokens"]) == 7
+    assert routed["request_tokens"] == single["request_tokens"]
+    assert routed["request_tokens"] == static["request_tokens"]
+    assert routed["fleet"]["pods"] and routed["fleet"]["rejected"] == 0
