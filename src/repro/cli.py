@@ -102,12 +102,19 @@ def cmd_ps(rt: Runtime, args) -> int:
             active = sum(r.get("active", 0) for r in reps)
             prefills = sum(r.get("prefill_execs", 0) for r in reps)
             router = pod.get("router")
+            # prefix page cache (paged pods with --prefix-cache): hit/miss
+            # + resident shared pages, summed over replicas
+            pcs = [r["prefix_cache"] for r in reps if r.get("prefix_cache")]
+            prefix = (f" phits={sum(c['hits'] for c in pcs)}"
+                      f"/{sum(c['misses'] for c in pcs)}"
+                      f" shared={sum(c['shared_pages'] for c in pcs)}"
+                      if pcs else "")
             print(f"{pod.get('pod', p.stem):26s} "
                   f"image={pod.get('image', '?')} "
                   f"replicas={len(reps)} capacity={pod.get('capacity', 0)} "
                   f"free={pod.get('free_slots', 0)} "
                   f"active={active} prefills={prefills} "
-                  f"rejected={pod.get('rejected', 0)} {phase:8s} "
+                  f"rejected={pod.get('rejected', 0)}{prefix} {phase:8s} "
                   f"ref={pod.get('ref') or '-'}"
                   + (f" router={router}" if router else ""))
     return 0
@@ -138,7 +145,15 @@ def cmd_serve(rt: Runtime, args) -> int:
     if args.platform:
         argv += ["--platform", args.platform]
     if args.paged:
-        argv += ["--paged", "--page-size", str(args.page_size)]
+        argv += ["--paged"]
+    if args.paged or args.prefix_cache:
+        # --prefix-cache implies --paged downstream; the page size must
+        # ride along either way or it silently falls back to the default
+        argv += ["--page-size", str(args.page_size)]
+    if args.prefix_cache:
+        argv += ["--prefix-cache"]
+    if args.shared_prefix:
+        argv += ["--shared-prefix", str(args.shared_prefix)]
     serve_main(argv)
     return 0
 
@@ -187,7 +202,9 @@ def main(argv=None) -> int:
     p.add_argument("--replicas", type=int, default=2)
     p.add_argument("--pods", type=int, default=1,
                    help="pods behind a PodRouter (>1 = multi-pod fleet)")
-    p.add_argument("--policy", choices=("shortest-queue", "consistent-hash"),
+    p.add_argument("--policy",
+                   choices=("shortest-queue", "consistent-hash",
+                            "prefix-hash"),
                    default="shortest-queue",
                    help="router placement policy (--pods > 1)")
     p.add_argument("--slots", type=int, default=8)
@@ -200,6 +217,11 @@ def main(argv=None) -> int:
     p.add_argument("--paged", action="store_true",
                    help="serve from a shared KV page pool (paged attention)")
     p.add_argument("--page-size", type=int, default=16)
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="copy-on-write prefix page sharing (implies --paged)")
+    p.add_argument("--shared-prefix", type=int, default=0,
+                   help="prepend an N-token shared system prompt to the "
+                        "trace")
 
     args = ap.parse_args(argv)
     rt = Runtime(args.root)

@@ -350,6 +350,7 @@ class Container:
                          page_size: int | None = None,
                          max_pages: int | None = None,
                          frontend_len: int | None = None,
+                         prefix_len: int | None = None,
                          per_row: bool | None = None, donate: bool = True):
         """jit + lower a serving step at arbitrary (non-cell) shapes.
 
@@ -439,10 +440,28 @@ class Container:
             return jitted.lower(aparams, cache, toks, pos)
         if kind == "prefill_slot_paged":
             fe_len = frontend_len or 0
-            fn = b.build_prefill_slot_paged(prompt_len, page_size, fe_len)
-            np_ = -(-(prompt_len + fe_len) // page_size)
+            pfx = prefix_len or 0
+            fn = b.build_prefill_slot_paged(prompt_len, page_size, fe_len,
+                                            pfx)
             toks = jax.ShapeDtypeStruct((1, prompt_len), tok)
             length = jax.ShapeDtypeStruct((), tok)
+            if pfx:
+                # prefix-cache hit: suffix-only prefill reading the cached
+                # prefix pages straight out of the live pool (undonated)
+                np_ = -(-prompt_len // page_size)
+                cache_sh = self._cache_shardings(
+                    self.model.paged_cache_defs(np_, page_size,
+                                                self.cache_dtype))
+                pool = self.paged_cache_specs(n_pages, page_size)
+                pool_sh = self.paged_cache_shardings(n_pages, page_size)
+                pages = jax.ShapeDtypeStruct((pfx // page_size,), tok)
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(pspec, pool_sh,
+                                  self._batch_sharding(toks.shape), rep, rep),
+                    out_shardings=(rep, cache_sh))
+                return jitted.lower(aparams, pool, toks, length, pages)
+            np_ = -(-(prompt_len + fe_len) // page_size)
             # the page-major small cache reuses the pool defs at np_ pages
             cache_sh = self._cache_shardings(
                 self.model.paged_cache_defs(np_, page_size, self.cache_dtype))

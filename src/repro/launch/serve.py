@@ -55,21 +55,34 @@ def _build_requests(args, cfg, rng):
     modality prefix: a deterministic stand-in for precomputed EnCodec
     frames / InternViT patch embeddings (the frontends are stubs per the
     assignment). Both serve modes replay this SAME trace, so continuous and
-    static produce identical tokens request-for-request."""
+    static produce identical tokens request-for-request.
+
+    ``--shared-prefix N`` prepends ONE fixed N-token block (a fleet-wide
+    system prompt) to every request and declares it via
+    ``GenRequest.prefix_len`` -- the trace the prefix page cache and the
+    prefix-hash router policy are measured on. The block is drawn from the
+    rng FIRST, so the per-request tail of the trace is identical whether
+    or not caching is enabled (same flags -> bitwise-same trace)."""
     from repro.orchestrator import GenRequest
     reqs = []
     budgets = _tail_budgets(args.gen, args.requests)
     fe_len = _frontend_width(cfg)
+    shared = max(0, int(getattr(args, "shared_prefix", 0)))
+    sys_prompt = rng.integers(0, cfg.vocab_size, shared) if shared else None
     for i in range(args.requests):
         plen = int(args.prompt_len * (0.5 + 0.5 * ((i * 7919) % 97) / 96))
         fe = (0.02 * rng.standard_normal((fe_len, cfg.d_model)).astype(
             np.float32) if fe_len else None)
+        prompt = rng.integers(0, cfg.vocab_size, max(1, plen))
+        if shared:
+            prompt = np.concatenate([sys_prompt, prompt])
         reqs.append(GenRequest(
             rid=i,
-            prompt=rng.integers(0, cfg.vocab_size, max(1, plen)),
+            prompt=prompt,
             max_new_tokens=budgets[i],
             arrival=i // max(1, getattr(args, "arrive_per_tick", 8)),
-            frontend=fe))
+            frontend=fe,
+            prefix_len=shared))
     return reqs
 
 
@@ -83,15 +96,18 @@ def _arch_config(rt: Runtime, image):
 def _make_pod(rt: Runtime, image, args, cfg):
     """One serving pod sized for the trace (shared by every fleet member)."""
     from repro.orchestrator import Pod
-    # per-request span: frontend prefix + prompt + gen + chunk-overshoot
-    max_len = _frontend_width(cfg) + args.prompt_len + args.gen + 8
+    # per-request span: frontend prefix + shared system prompt + prompt +
+    # gen + chunk-overshoot
+    shared = max(0, int(getattr(args, "shared_prefix", 0)))
+    max_len = _frontend_width(cfg) + shared + args.prompt_len + args.gen + 8
     if getattr(args, "paged", False):
         # paged: max_len is only the per-request span; double it so long
         # requests fit, and size the pool to the contiguous bank's HBM
         return Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
                    max_len=2 * max_len, platform=args.platform,
                    seed=args.seed, paged=True, page_size=args.page_size,
-                   n_pages=args.slots * (-(-max_len // args.page_size)) + 1)
+                   n_pages=args.slots * (-(-max_len // args.page_size)) + 1,
+                   prefix_cache=bool(getattr(args, "prefix_cache", False)))
     return Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
                max_len=max_len, platform=args.platform, seed=args.seed)
 
@@ -138,6 +154,13 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
         "prefill_s": pre_s,
         "decode_ticks": ticks,
         "decode_tok_per_s": toks / dec_s if dec_s else 0.0,
+        "prefill_positions": sum(e.prefill_positions for e in engines),
+        "prefix_cache": {
+            "enabled": any(e.prefix_cache for e in engines),
+            "hits": sum(e.prefix_hits for e in engines),
+            "misses": sum(e.prefix_misses for e in engines),
+            "tokens_saved": sum(e.prefix_tokens_saved for e in engines),
+        },
         # nearest-rank percentiles, measured from request ARRIVAL (the
         # trace stagger is offered load, not serving latency)
         **latency_summary(done),
@@ -157,6 +180,10 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
           f"(decode {out['decode_tok_per_s']:.0f} tok/s over {ticks} ticks; "
           f"p50 {out['p50_latency_ticks']} / p99 {out['p99_latency_ticks']} "
           f"ticks)")
+    pc = out["prefix_cache"]
+    if pc["enabled"]:
+        print(f"[serve] prefix cache: {pc['hits']} hits / {pc['misses']} "
+              f"misses, {pc['tokens_saved']} prefill tokens skipped")
     return out
 
 
@@ -252,9 +279,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--pods", type=int, default=1,
                     help="pods behind a PodRouter (>1 = multi-pod fleet)")
-    ap.add_argument("--policy", choices=("shortest-queue", "consistent-hash"),
+    ap.add_argument("--policy",
+                    choices=("shortest-queue", "consistent-hash",
+                             "prefix-hash"),
                     default="shortest-queue",
-                    help="router placement policy (--pods > 1)")
+                    help="router placement policy (--pods > 1); prefix-hash "
+                         "places on the shared-prefix digest so cache hits "
+                         "land on the pod that owns the pages")
     ap.add_argument("--slots", type=int, default=8,
                     help="KV slots per replica (static: the batch size)")
     ap.add_argument("--requests", type=int, default=32)
@@ -267,9 +298,17 @@ def main(argv=None) -> dict:
                     help="paged KV cache (shared page pool + Pallas "
                          "paged-attention) instead of per-slot slabs")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="copy-on-write prefix page sharing for requests "
+                         "declaring a shared leading block (implies --paged)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend one fixed N-token system prompt to every "
+                         "request (the shared-prefix trace)")
     ap.add_argument("--root", default=".stevedore")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.prefix_cache:
+        args.paged = True           # prefix sharing is page-granular
     if args.mode == "static" and args.pods > 1:
         # never let a "static fleet" silently serve from one host: the
         # static baseline has no router tier, and comparing it against an

@@ -117,7 +117,7 @@ def _sdpa_dense(q, k, v, q_pos, k_pos, window, scale,
 
 def _sdpa_chunked(q, k, v, q_pos, k_pos, window, scale,
                   score_dtype=jnp.float32,
-                  q_chunk=None, kv_chunk=None) -> jax.Array:
+                  q_chunk=None, kv_chunk=None, q_offset: int = 0) -> jax.Array:
     """Online-softmax over KV chunks (flash-style, XLA formulation).
 
     Memory: O(Sq * KV_CHUNK) scores instead of O(Sq * Sk).
@@ -151,8 +151,10 @@ def _sdpa_chunked(q, k, v, q_pos, k_pos, window, scale,
         q_pos = jnp.pad(q_pos, ((0, 0), (0, qpad)), constant_values=-1)
 
     # static per-chunk position bounds: q_pos/k_pos are data, but for the
-    # skip decision we rely on the canonical layout (positions ascending,
-    # 0-based) which holds for train/prefill; decode (Sq==1) never skips.
+    # skip decision we rely on the canonical layout (positions ascending
+    # from ``q_offset`` -- 0 for train/prefill, the shared-prefix length
+    # for prefix-cached suffix prefill, whose queries see prefix keys at
+    # positions BELOW their own block index); decode (Sq==1) never skips.
     causal_layout = Sq > 1
     out_qchunks = []
     for qi in range(nq):
@@ -161,8 +163,8 @@ def _sdpa_chunked(q, k, v, q_pos, k_pos, window, scale,
         m = jnp.full((B, Hkv, G, Q_CHUNK), NEG_INF, jnp.float32)
         l = jnp.zeros((B, Hkv, G, Q_CHUNK), jnp.float32)
         acc = jnp.zeros((B, Hkv, G, Q_CHUNK, hd), jnp.float32)
-        q_lo = qi * Q_CHUNK                       # min q position in block
-        q_hi = (qi + 1) * Q_CHUNK - 1
+        q_lo = q_offset + qi * Q_CHUNK            # min q position in block
+        q_hi = q_offset + (qi + 1) * Q_CHUNK - 1
         for ki in range(nchunks):
             k_lo = ki * KV_CHUNK
             if causal_layout:
@@ -207,17 +209,23 @@ def _sdpa_chunked(q, k, v, q_pos, k_pos, window, scale,
 
 
 def attend(q, k, v, q_pos, k_pos, window: int = 0,
-           score_dtype=jnp.float32, q_chunk=None, kv_chunk=None) -> jax.Array:
+           score_dtype=jnp.float32, q_chunk=None, kv_chunk=None,
+           q_offset: int = 0) -> jax.Array:
     """Grouped attention. q: (B,Sq,Hq,hd) -> (B,Sq,Hq,hd).
 
-    k/v carry the *replicated* kv heads (geom.n_kv)."""
+    k/v carry the *replicated* kv heads (geom.n_kv). ``q_offset`` is the
+    STATIC base of the canonical q positions (nonzero only for the
+    prefix-cached suffix prefill) -- the chunked path's trace-time causal
+    skipping must know it, or it would skip KV chunks that sit between the
+    0-based block index and the true offset positions."""
     B, Sq, Hq, hd = q.shape
     Hkv = k.shape[2]
     scale = 1.0 / math.sqrt(hd)
     qg = q.reshape(B, Sq, Hkv, Hq // Hkv, hd)
     if k.shape[1] > CHUNKED_KV_THRESHOLD or score_dtype != jnp.float32:
         out = _sdpa_chunked(qg, k, v, q_pos, k_pos, window, scale,
-                            score_dtype, q_chunk=q_chunk, kv_chunk=kv_chunk)
+                            score_dtype, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            q_offset=q_offset)
     else:
         out = _sdpa_dense(qg, k, v, q_pos, k_pos, window, scale)
     return out.reshape(B, Sq, Hq, hd)

@@ -223,7 +223,10 @@ class Model:
     def forward(self, params: dict, tokens: jax.Array,
                 frontend_embeds: jax.Array | None = None,
                 frontend_len: jax.Array | None = None,
-                collect_cache: bool = False, cache_len: int | None = None):
+                collect_cache: bool = False, cache_len: int | None = None,
+                prefix_kv: dict | None = None,
+                prefix_pages: jax.Array | None = None,
+                prefix_len: int = 0):
         """tokens: (B, S_tok). Returns logits (B,S,Vp) [, cache].
 
         ``frontend_embeds`` (B, F, D) is a modality prefix prepended ahead of
@@ -233,9 +236,28 @@ class Model:
         garbage) so positions stay gap-free and the causal mask hides every
         pad row -- the serving path's right-pad contract. With
         ``frontend_len == F`` the pack is the identity gather, bitwise equal
-        to the plain concatenation the train path uses."""
+        to the plain concatenation the train path uses.
+
+        SUFFIX prefill over a shared KV prefix (the paged prefix cache):
+        with ``prefix_len > 0`` (static), ``tokens`` are only the UNCACHED
+        suffix of a prompt whose first ``prefix_len`` positions already sit
+        in the paged pool ``prefix_kv`` (the per-stage paged_cache_defs
+        tree) at the physical pages listed in ``prefix_pages``
+        ((prefix_len / page_size,) int32). Token positions are offset past
+        the prefix (RoPE included) and every attention block gathers the
+        prefix pages and attends over [prefix, suffix]; the collected cache
+        covers the SUFFIX positions only. Full-attention archs only --
+        exactly the archs the paged pool itself admits."""
         cfg = self.cfg
         dtype = self.act_dtype
+        if prefix_len:
+            if frontend_embeds is not None:
+                raise NotImplementedError(
+                    "prefix-cached suffix prefill does not compose with "
+                    "frontend embeddings")
+            if prefix_kv is None or prefix_pages is None:
+                raise ValueError("prefix_len > 0 needs prefix_kv + "
+                                 "prefix_pages")
         x = embed_tokens(params["embed"], tokens, cfg, dtype)
         if frontend_embeds is not None:
             fe = frontend_embeds.astype(dtype)
@@ -252,18 +274,22 @@ class Model:
         B, S, _ = x.shape
         x = self.constrain(x, ("batch", "seq", "embed"))
         # (1, S): positions are batch-independent in train/prefill, so the
-        # causal mask materialises as (1, Sq, Sk) instead of (B, Sq, Sk)
-        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        # causal mask materialises as (1, Sq, Sk) instead of (B, Sq, Sk).
+        # Suffix prefill offsets them past the cached prefix.
+        positions = prefix_len + jnp.arange(S, dtype=jnp.int32)[None, :]
 
         caches = {}
         aux_total = jnp.zeros((), jnp.float32)
         for si, st in enumerate(self.stages):
             body = self._make_body(st, positions, collect_cache,
-                                   cache_len or S)
+                                   cache_len or S,
+                                   prefix_pages=prefix_pages,
+                                   prefix_len=prefix_len)
             if self.remat != "none":
                 body = _remat(body, self.remat)
-            (x, aux), ys = jax.lax.scan(body, (x, aux_total),
-                                        params[f"stage{si}"])
+            xs = ((params[f"stage{si}"], prefix_kv[f"stage{si}"])
+                  if prefix_len else params[f"stage{si}"])
+            (x, aux), ys = jax.lax.scan(body, (x, aux_total), xs)
             aux_total = aux
             if collect_cache:
                 caches[f"stage{si}"] = ys
@@ -274,16 +300,22 @@ class Model:
             return logits, caches, aux_total
         return logits, aux_total
 
-    def _make_body(self, st: Stage, positions, collect_cache: bool, cache_len: int):
+    def _make_body(self, st: Stage, positions, collect_cache: bool,
+                   cache_len: int, prefix_pages=None, prefix_len: int = 0):
         cfg, geom = self.cfg, self.geom
 
-        def body(carry, unit_params):
+        def body(carry, xs):
             x, aux = carry
+            unit_params, unit_prefix = xs if prefix_len else (xs, None)
             entries = {}
             for bi, kind in enumerate(st.unit):
                 p = unit_params[f"b{bi}"]
+                pkv = unit_prefix.get(f"b{bi}") if unit_prefix else None
                 x, aux_b, entry = self._apply_block(kind, p, x, positions,
-                                                    collect_cache, cache_len)
+                                                    collect_cache, cache_len,
+                                                    prefix_kv=pkv,
+                                                    prefix_pages=prefix_pages,
+                                                    prefix_len=prefix_len)
                 aux = aux + aux_b
                 if collect_cache and entry is not None:
                     entries[f"b{bi}"] = entry
@@ -292,11 +324,15 @@ class Model:
         return body
 
     def _apply_block(self, kind: str, p: dict, x, positions,
-                     collect_cache: bool, cache_len: int):
+                     collect_cache: bool, cache_len: int,
+                     prefix_kv=None, prefix_pages=None, prefix_len: int = 0):
         cfg, geom = self.cfg, self.geom
         aux = jnp.zeros((), jnp.float32)
         entry = None
         window = cfg.window if (kind == "local" or cfg.attn_kind == "local") else 0
+        if prefix_len and (window or kind in ("ssm", "rec")):
+            raise NotImplementedError(
+                "prefix-cached suffix prefill supports full attention only")
 
         if kind in ("attn", "local", "moe"):
             h = apply_norm(p["ln1"], x, cfg.norm)
@@ -304,10 +340,28 @@ class Model:
             q = self.constrain(q, ("batch", "seq", "heads", None))
             k = self.constrain(k, ("batch", "kv_seq", "kv_heads", None))
             v = self.constrain(v, ("batch", "kv_seq", "kv_heads", None))
-            ctx = attn_mod.attend(q, k, v, positions, positions, window,
+            k_all, v_all, kv_pos = k, v, positions
+            if prefix_len:
+                # gather the cached prefix pages (n_kv, kp, ps, hd) into a
+                # contiguous (B, prefix_len, n_kv, hd) history ahead of the
+                # suffix KV; kv positions run 0..prefix_len+S-1 while the q
+                # positions stay offset past the prefix
+                B, S = k.shape[0], k.shape[1]
+                def _gather(pool):
+                    n_kv, _, ps_, hd = pool.shape
+                    pg = jnp.take(pool, prefix_pages, axis=1)
+                    pg = pg.reshape(n_kv, prefix_len, hd).transpose(1, 0, 2)
+                    return jnp.broadcast_to(pg[None], (B, prefix_len, n_kv, hd))
+                k_all = jnp.concatenate(
+                    [_gather(prefix_kv["k"]).astype(k.dtype), k], axis=1)
+                v_all = jnp.concatenate(
+                    [_gather(prefix_kv["v"]).astype(v.dtype), v], axis=1)
+                kv_pos = jnp.arange(prefix_len + S, dtype=jnp.int32)[None, :]
+            ctx = attn_mod.attend(q, k_all, v_all, positions, kv_pos, window,
                                   score_dtype=jnp.dtype(cfg.attn_score_dtype),
                                   q_chunk=cfg.attn_q_chunk,
-                                  kv_chunk=cfg.attn_kv_chunk)
+                                  kv_chunk=cfg.attn_kv_chunk,
+                                  q_offset=prefix_len)
             attn_out = attn_mod.attn_out(p["attn"], ctx)
             if collect_cache:
                 entry = self._prefill_cache_entry(k, v, window, cache_len)

@@ -12,13 +12,18 @@ CompileCache.
 global page pool (``PagePool`` + the Pallas paged-attention kernel):
 admission is then bounded by pool pressure instead of per-slot ``max_len``
 slabs, so short requests stop stranding memory and long ones stop being
-rejected by the slab ceiling.
+rejected by the slab ceiling. ``prefix_cache=True`` adds copy-on-write
+prefix page sharing on top: requests declaring the same leading token
+block (``GenRequest.prefix_len``) share its refcounted KV pages through a
+digest-keyed index and prefill only their suffix -- the paper's shared
+immutable image layers, applied to the KV cache.
 
 ``PodRouter`` scales past one pod: N pods (each with its own scheduler and
-queue) behind one submit()/step()/run() surface, with shortest-queue or
-consistent-hash placement, spillover-before-reject, and router-level
-drains -- ``RollingDeployer`` accepts a router and rolls the fleet
-pod-by-pod at >= N-1 pods of capacity.
+queue) behind one submit()/step()/run() surface, with shortest-queue,
+consistent-hash or prefix-hash (prefix-cache affinity) placement,
+spillover-before-reject, and router-level drains -- ``RollingDeployer``
+accepts a router and rolls the fleet pod-by-pod at >= N-1 pods of
+capacity.
 """
 
 from repro.orchestrator.deployer import RollingDeployer

@@ -21,6 +21,30 @@ Allocation protocol (reservation-based, preempt-free):
   * ``release(slot)`` at COMPLETION returns owned pages and the remaining
     reservation in one step and resets the table row.
 
+Prefix sharing (the container-layer analogy: immutable image layers shared
+by many containers):
+
+  * a slot's leading, fully-written prompt pages can be PROMOTED into a
+    digest-keyed prefix index (``cache_prefix``) -- they become immutable
+    shared pages, refcounted per mapping;
+  * a later request whose prompt starts with the same token block
+    (``lookup`` compares the FULL block, not just the digest) maps those
+    pages into its own table rows via ``share`` and only allocates private
+    pages for its suffix;
+  * ``release`` decrefs shared pages instead of freeing them -- other
+    sharers and the index keep them alive. Refcount-0 cached pages stay
+    resident as a warm cache and are reclaimed LRU-entry-at-a-time only
+    under pool pressure (``_take_page`` eviction); a page with live refs is
+    never evicted;
+  * ``cow`` is the copy-on-write escape hatch: it remaps a slot's LAST
+    shared table row to a fresh private page (the caller copies the device
+    contents) so a sharer that must write inside the shared span can do so
+    without perturbing the other sharers.
+
+``free_unreserved`` generalizes to ``free + evictable - unfilled promises``
+so admission can count reclaimable refcount-0 cached pages as headroom
+while never breaking an outstanding reservation.
+
 Page 0 is reserved as the *garbage page*: table rows reset to 0, so device
 scatters/gathers through free or not-yet-extended slots land on a real page
 whose contents are never read unmasked. ``capacity`` excludes it.
@@ -28,9 +52,23 @@ whose contents are never read unmasked. ``capacity`` excludes it.
 
 from __future__ import annotations
 
+from dataclasses import dataclass, field
+
 import numpy as np
 
 GARBAGE_PAGE = 0
+
+
+@dataclass
+class PrefixEntry:
+    """One cached prompt prefix: its digest, the FULL token block (for the
+    exact compare that defeats digest collisions), and the immutable pages
+    holding its first ``len(pages) * page_size`` KV positions."""
+    digest: str
+    tokens: np.ndarray            # (block_len,) int32, the declared block
+    pages: list[int]              # physical page ids, page-aligned coverage
+    last_used: int = 0            # LRU clock stamp
+    hits: int = 0
 
 
 class PagePool:
@@ -46,11 +84,22 @@ class PagePool:
         self.table = np.full((self.n_slots, self.max_pages), GARBAGE_PAGE,
                              np.int32)
         self.owned: list[list[int]] = [[] for _ in range(self.n_slots)]
+        # leading table rows mapped to SHARED (cached) pages; a slot's table
+        # is always [shared rows, owned rows, garbage...]
+        self.shared: list[list[int]] = [[] for _ in range(self.n_slots)]
         self.reserved = np.zeros(self.n_slots, np.int64)
-        # accounting (status + the fig7 benchmark)
+        # per-page count of slot mappings (shared rows only; owned pages are
+        # exclusively held, cached pages at refcount 0 are evictable)
+        self.refcount = np.zeros(self.n_pages, np.int64)
+        self.prefix: dict[str, PrefixEntry] = {}
+        self._clock = 0
+        # accounting (status + the fig7/fig9 benchmarks)
         self.pages_allocated = 0
         self.pages_freed = 0
         self.peak_in_use = 0
+        self.prefix_hits = 0
+        self.evictions = 0
+        self.cow_copies = 0
 
     # -- capacity -----------------------------------------------------------
     @property
@@ -63,9 +112,30 @@ class PagePool:
         return int(self.reserved.sum())
 
     @property
+    def total_owned(self) -> int:
+        return sum(len(o) for o in self.owned)
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages resident in the prefix index (shared or warm)."""
+        return sum(len(e.pages) for e in self.prefix.values())
+
+    def _evictable(self, entry: PrefixEntry) -> bool:
+        return all(self.refcount[p] == 0 for p in entry.pages)
+
+    @property
+    def evictable_pages(self) -> int:
+        """Cached pages with no live sharers -- reclaimable under pressure."""
+        return sum(len(e.pages) for e in self.prefix.values()
+                   if self._evictable(e))
+
+    @property
     def free_unreserved(self) -> int:
-        """Pages neither owned nor promised to an admitted request."""
-        return self.capacity - self.total_reserved
+        """Headroom for NEW reservations: free + evictable cached pages,
+        minus pages already promised to admitted requests but not yet drawn
+        (the promise invariant ``check`` pins)."""
+        unfilled = self.total_reserved - self.total_owned
+        return len(self.free) + self.evictable_pages - unfilled
 
     def pages_for(self, positions: int) -> int:
         """Pages needed to cover ``positions`` KV positions."""
@@ -74,65 +144,231 @@ class PagePool:
     def can_reserve(self, n: int) -> bool:
         return n <= self.free_unreserved
 
+    def pin_cost(self, entry: PrefixEntry) -> int:
+        """Extra headroom a ``share`` of ``entry`` consumes: pinning a
+        currently-evictable entry removes ALL its pages from the evictable
+        set, so admission must budget them like an allocation."""
+        return len(entry.pages) if self._evictable(entry) else 0
+
     # -- allocation ---------------------------------------------------------
     def reserve(self, slot: int, n: int) -> None:
-        if self.reserved[slot] or self.owned[slot]:
+        if self.reserved[slot] or self.owned[slot] or self.shared[slot]:
             raise RuntimeError(f"slot {slot} already holds a reservation")
         if not self.can_reserve(n):
             raise RuntimeError(
                 f"cannot reserve {n} pages: {self.free_unreserved} unreserved")
         self.reserved[slot] = n
 
+    def _take_page(self) -> int:
+        """One page off the free-list, evicting LRU refcount-0 prefix
+        entries under pressure. Never touches a page with live refs."""
+        while not self.free:
+            victims = [e for e in self.prefix.values() if self._evictable(e)]
+            if not victims:
+                raise RuntimeError(
+                    "page pool exhausted: no free pages and every cached "
+                    "prefix has live sharers")
+            lru = min(victims, key=lambda e: e.last_used)
+            self._evict(lru)
+        return self.free.pop()
+
+    def _evict(self, entry: PrefixEntry) -> None:
+        assert self._evictable(entry), "evicting a prefix with live refs"
+        del self.prefix[entry.digest]
+        self.free.extend(entry.pages)
+        self.pages_freed += len(entry.pages)
+        self.evictions += 1
+
     def alloc_upto(self, slot: int, hi: int) -> None:
-        """Ensure pages cover logical positions [0, hi] for ``slot``."""
+        """Ensure pages cover logical positions [0, hi] for ``slot``.
+        Shared rows count toward coverage; only private (owned) pages are
+        drawn from the free-list."""
         need = self.pages_for(hi + 1)
-        have = len(self.owned[slot])
+        base = len(self.shared[slot])
+        have = base + len(self.owned[slot])
         if need <= have:
             return
-        if need > self.reserved[slot]:
+        if need - base > self.reserved[slot]:
             raise RuntimeError(
-                f"slot {slot}: {need} pages exceeds reservation "
-                f"{int(self.reserved[slot])}")
+                f"slot {slot}: {need - base} private pages exceeds "
+                f"reservation {int(self.reserved[slot])}")
         for j in range(have, need):
-            page = self.free.pop()
+            page = self._take_page()
             self.owned[slot].append(page)
             self.table[slot, j] = page
             self.pages_allocated += 1
         self.peak_in_use = max(self.peak_in_use, self.in_use)
 
     def release(self, slot: int) -> None:
-        """Full reclaim: owned pages AND the remaining reservation."""
+        """Full reclaim of PRIVATE state: owned pages and the remaining
+        reservation return; shared pages are only decref'd -- they belong
+        to the prefix index and possibly to other sharers' table rows, so
+        freeing them here would let a reallocation clobber a live prefix."""
         pages = self.owned[slot]
         self.free.extend(pages)
         self.pages_freed += len(pages)
         self.owned[slot] = []
+        for p in self.shared[slot]:
+            self.refcount[p] -= 1
+        self.shared[slot] = []
         self.reserved[slot] = 0
         self.table[slot, :] = GARBAGE_PAGE
+
+    # -- prefix sharing -----------------------------------------------------
+    def lookup(self, digest: str, tokens: np.ndarray,
+               touch: bool = False) -> PrefixEntry | None:
+        """Cache probe. A digest match alone is NOT a hit: the stored block
+        is compared token-for-token, so a colliding digest over different
+        tokens misses instead of serving someone else's prefix."""
+        entry = self.prefix.get(digest)
+        if entry is None:
+            return None
+        tokens = np.asarray(tokens, np.int32)
+        if entry.tokens.shape != tokens.shape or \
+                not np.array_equal(entry.tokens, tokens):
+            return None
+        if touch:
+            self._clock += 1
+            entry.last_used = self._clock
+        return entry
+
+    def share(self, slot: int, entry: PrefixEntry, n: int) -> None:
+        """Map the first ``n`` cached pages of ``entry`` into ``slot``'s
+        leading table rows. Must precede any private allocation for the
+        slot (shared rows always form the table prefix)."""
+        if self.shared[slot] or self.owned[slot]:
+            raise RuntimeError(f"slot {slot} already has mapped pages")
+        if n < 1 or n > len(entry.pages):
+            raise ValueError(f"share of {n} pages from a "
+                             f"{len(entry.pages)}-page prefix")
+        # pinning a currently-evictable entry shrinks the evictable set the
+        # outstanding reservations count on: enforce the preempt-free
+        # promise HERE, not just in the admission caller (can_start budgets
+        # pin_cost before reserving; any other call path must too)
+        pin = self.pin_cost(entry)
+        if pin and self.free_unreserved < pin:
+            raise RuntimeError(
+                f"sharing would pin {pin} evictable pages promised to "
+                f"outstanding reservations ({self.free_unreserved} "
+                "unreserved)")
+        pages = list(entry.pages[:n])
+        for j, p in enumerate(pages):
+            self.refcount[p] += 1
+            self.table[slot, j] = p
+        self.shared[slot] = pages
+        self._clock += 1
+        entry.last_used = self._clock
+        entry.hits += 1
+        self.prefix_hits += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+
+    def cache_prefix(self, digest: str, tokens: np.ndarray, slot: int,
+                     n: int) -> bool:
+        """Promote ``slot``'s first ``n`` owned pages into the prefix index
+        (they must already hold fully-written prompt KV). The slot keeps
+        using them -- as shared refs now -- and its reservation shrinks by
+        ``n`` since those rows no longer draw private pages. First writer
+        wins: an existing entry under the digest is kept untouched."""
+        if digest in self.prefix:
+            return False
+        if self.shared[slot] or n < 1 or n > len(self.owned[slot]):
+            return False
+        pages = self.owned[slot][:n]
+        self.owned[slot] = self.owned[slot][n:]
+        self.shared[slot] = list(pages)
+        for p in pages:
+            self.refcount[p] += 1
+        self.reserved[slot] -= n
+        self._clock += 1
+        self.prefix[digest] = PrefixEntry(
+            digest=digest, tokens=np.array(tokens, np.int32, copy=True),
+            pages=list(pages), last_used=self._clock)
+        return True
+
+    def cow(self, slot: int) -> tuple[int, int]:
+        """Copy-on-write the slot's LAST shared table row: remap it to a
+        fresh private page and decref the shared one. Returns (old, new)
+        physical ids -- the caller copies the device page contents before
+        any write. Draws against the slot's reservation."""
+        if not self.shared[slot]:
+            raise RuntimeError(f"slot {slot} has no shared pages to COW")
+        if len(self.owned[slot]) + 1 > self.reserved[slot]:
+            raise RuntimeError(
+                f"slot {slot}: COW would exceed reservation "
+                f"{int(self.reserved[slot])}")
+        old = self.shared[slot].pop()
+        row = len(self.shared[slot])
+        new = self._take_page()
+        self.refcount[old] -= 1
+        self.owned[slot].insert(0, new)
+        self.table[slot, row] = new
+        self.pages_allocated += 1
+        self.cow_copies += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return old, new
+
+    def drop_prefixes(self) -> int:
+        """Evict every refcount-0 cached prefix (tests / explicit flush).
+        Entries with live sharers survive. Returns entries evicted."""
+        n = 0
+        for e in [e for e in self.prefix.values() if self._evictable(e)]:
+            self._evict(e)
+            n += 1
+        return n
 
     # -- introspection ------------------------------------------------------
     @property
     def in_use(self) -> int:
-        return sum(len(o) for o in self.owned)
+        """Non-free pages: privately owned + cached (shared or warm)."""
+        return self.capacity - len(self.free)
 
     def check(self) -> None:
         """Invariants; raises AssertionError on any violation. Cheap enough
         to call after every operation in tests."""
         owned_all = [p for o in self.owned for p in o]
+        cached_all = [p for e in self.prefix.values() for p in e.pages]
         assert GARBAGE_PAGE not in owned_all, "garbage page was allocated"
+        assert GARBAGE_PAGE not in cached_all, "garbage page was cached"
         assert GARBAGE_PAGE not in self.free, "garbage page on free-list"
         assert len(set(owned_all)) == len(owned_all), "page owned twice"
+        assert len(set(cached_all)) == len(cached_all), \
+            "page cached in two prefixes"
         assert len(set(self.free)) == len(self.free), "free-list duplicate"
         assert not (set(owned_all) & set(self.free)), "page both owned+free"
-        assert len(self.free) + len(owned_all) == self.capacity, \
-            "pages leaked or conjured"
-        assert self.pages_allocated - self.pages_freed == len(owned_all)
-        for slot, o in enumerate(self.owned):
-            assert len(o) <= self.reserved[slot], "allocation > reservation"
-            for j, page in enumerate(o):
-                assert self.table[slot, j] == page, "table/owned mismatch"
-            assert (self.table[slot, len(o):] == GARBAGE_PAGE).all(), \
+        assert not (set(cached_all) & set(self.free)), "page both cached+free"
+        assert not (set(owned_all) & set(cached_all)), \
+            "page both owned and cached"
+        assert len(self.free) + len(owned_all) + len(cached_all) \
+            == self.capacity, "pages leaked or conjured"
+        assert self.pages_allocated - self.pages_freed \
+            == len(owned_all) + len(cached_all)
+        # refcounts == shared-row occurrences, and every shared page is
+        # backed by a live prefix entry (eviction requires refcount 0, so a
+        # mapped page can never lose its entry out from under a sharer)
+        refs: dict[int, int] = {}
+        for slot, sh in enumerate(self.shared):
+            for p in sh:
+                refs[p] = refs.get(p, 0) + 1
+            assert set(sh) <= set(cached_all), \
+                f"slot {slot} shares a page missing from the prefix index"
+        for p in range(self.n_pages):
+            assert self.refcount[p] == refs.get(p, 0), \
+                f"page {p}: refcount {int(self.refcount[p])} != " \
+                f"{refs.get(p, 0)} table occurrences"
+        for slot in range(self.n_slots):
+            rows = self.shared[slot] + self.owned[slot]
+            assert len(self.owned[slot]) <= self.reserved[slot], \
+                "allocation > reservation"
+            for j, page in enumerate(rows):
+                assert self.table[slot, j] == page, "table/rows mismatch"
+            assert (self.table[slot, len(rows):] == GARBAGE_PAGE).all(), \
                 "table maps unallocated positions"
         assert self.total_reserved <= self.capacity, "pool over-committed"
+        # the preempt-free promise: every reserved-but-undrawn page must be
+        # coverable by free + evictable pages RIGHT NOW
+        unfilled = self.total_reserved - self.total_owned
+        assert unfilled <= len(self.free) + self.evictable_pages, \
+            "outstanding reservations exceed reclaimable pages"
 
     def status(self) -> dict:
         return {
@@ -142,4 +378,9 @@ class PagePool:
             "reserved": self.total_reserved,
             "free_unreserved": self.free_unreserved,
             "peak_in_use": self.peak_in_use,
+            "cached_pages": self.cached_pages,
+            "cached_prefixes": len(self.prefix),
+            "prefix_hits": self.prefix_hits,
+            "evictions": self.evictions,
+            "cow_copies": self.cow_copies,
         }

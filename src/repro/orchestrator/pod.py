@@ -28,7 +28,8 @@ class Pod:
                  max_len: int = 256, platform: str | None = None,
                  seed: int = 0, eos_id: int | None = None,
                  decode_chunk: int = 4, paged: bool = False,
-                 page_size: int = 16, n_pages: int | None = None):
+                 page_size: int = 16, n_pages: int | None = None,
+                 prefix_cache: bool = False):
         if replicas < 1:
             raise ValueError("a Pod needs at least one replica")
         self.runtime = runtime
@@ -47,6 +48,9 @@ class Pod:
         self.paged = bool(paged)
         self.page_size = int(page_size)
         self.n_pages = n_pages
+        # copy-on-write prefix page sharing (paged only): each replica's
+        # pool keeps a digest-keyed index of shared prompt-prefix pages
+        self.prefix_cache = bool(prefix_cache)
         self.pod_id = f"pod-{uuid.uuid4().hex[:8]}"
         # pod-lifetime rejection counter, incremented by whichever scheduler
         # fronts this pod (a burst of rejections is a served-badly signal
@@ -77,7 +81,8 @@ class Pod:
                           name=f"{self.pod_id}/r{index}",
                           decode_chunk=self.decode_chunk,
                           paged=self.paged, page_size=self.page_size,
-                          n_pages=self.n_pages)
+                          n_pages=self.n_pages,
+                          prefix_cache=self.prefix_cache)
 
     def drop_params(self, image_digest: str) -> None:
         """Release a retired generation's shared params (deployer calls

@@ -10,6 +10,7 @@ indefinitely -- the classic continuous-batching prefill/decode interleave.
 
 from __future__ import annotations
 
+import hashlib
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -28,6 +29,13 @@ class GenRequest:
     # None = unconditional generation (valid on frontend archs too); any
     # non-None prefix is rejected by text-only engines at admission.
     frontend: np.ndarray | None = None
+    # declared SHARED leading token block (e.g. a fleet-wide system prompt):
+    # prompt[:prefix_len] is eligible for copy-on-write prefix-page sharing
+    # on paged engines, keyed by prefix_digest (md5 over the block, computed
+    # here; placement can hash on it -- see PodRouter's prefix-hash policy).
+    # 0 = nothing shareable. Clamped to prompt_len.
+    prefix_len: int = 0
+    prefix_digest: str | None = None    # derived; do not set manually
 
     # -- runtime state (owned by the scheduler/engine) ----------------------
     state: str = "queued"               # queued | running | done
@@ -57,6 +65,12 @@ class GenRequest:
                 raise ValueError(
                     f"request {self.rid}: frontend must be a non-empty "
                     "(fe_len, d_model) array")
+        self.prefix_len = max(0, min(int(self.prefix_len), self.prompt_len))
+        # the digest is the cache/placement KEY only; correctness never
+        # rests on it (the pool compares the full block on lookup)
+        self.prefix_digest = (hashlib.md5(
+            self.prompt[:self.prefix_len].tobytes()).hexdigest()
+            if self.prefix_len else None)
 
     @property
     def prompt_len(self) -> int:

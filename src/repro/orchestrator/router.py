@@ -13,10 +13,17 @@ Placement is pluggable:
   outstanding decode work (committed tokens not yet finished), tie-broken
   by pod order -- load-aware, keeps the fleet evenly packed.
 * ``consistent-hash``: hash the request id onto a static ring of virtual
-  nodes (session affinity -- a future prefix cache can rely on a rid
-  family landing on one pod). The ring never mutates: draining a pod just
+  nodes (session affinity). The ring never mutates: draining a pod just
   makes the walk skip it, so ONLY the drained pod's keys move (to their
   ring successors) and they return home when it un-drains.
+* ``prefix-hash``: same ring, but the key is the request's PROMPT-PREFIX
+  digest (``GenRequest.prefix_digest``) when it has one, falling back to
+  the rid hash otherwise. Requests sharing a system prompt then land on
+  the pod whose paged pool already holds the copy-on-write prefix pages
+  (see PagePool.cache_prefix) -- prefix-cache affinity. Draining behaves
+  like consistent-hash: a drained pod's digests move to the ring
+  successor, whose pool re-materializes them on first miss, and they
+  return home on undrain.
 
 Both policies spill before they reject: if no engine in the preferred pod
 can EVER fit a request (slab / page-table span / pool / frontend
@@ -49,7 +56,7 @@ from repro.orchestrator.pod import Pod
 from repro.orchestrator.request_queue import GenRequest
 from repro.orchestrator.scheduler import ContinuousScheduler
 
-PLACEMENT_POLICIES = ("shortest-queue", "consistent-hash")
+PLACEMENT_POLICIES = ("shortest-queue", "consistent-hash", "prefix-hash")
 
 
 def _hash64(key: str) -> int:
@@ -127,8 +134,15 @@ class PodRouter:
         feasible only on a pod that is transiently draining (a rolling
         upgrade) waits in its queue rather than being terminally rejected.
         The first entry is the policy's choice; the rest spill over."""
-        if self.policy == "consistent-hash":
-            i = bisect.bisect_right(self._ring_keys, _hash64(f"rid:{req.rid}"))
+        if self.policy in ("consistent-hash", "prefix-hash"):
+            # prefix-hash: place on the shared-prefix digest so every
+            # request with the same system prompt walks to the pod whose
+            # pool holds (or will fill) those prefix pages; digest-less
+            # requests degrade to plain rid session affinity
+            key = (f"px:{req.prefix_digest}"
+                   if self.policy == "prefix-hash" and req.prefix_digest
+                   else f"rid:{req.rid}")
+            i = bisect.bisect_right(self._ring_keys, _hash64(key))
             order, seen = [], set()
             for k in range(len(self._ring)):
                 p = self._ring[(i + k) % len(self._ring)][1]

@@ -61,7 +61,8 @@ class SlotEngine:
     def __init__(self, container, params, *, n_slots: int, max_len: int,
                  eos_id: int | None = None, name: str | None = None,
                  decode_chunk: int = 4, paged: bool = False,
-                 page_size: int = 16, n_pages: int | None = None):
+                 page_size: int = 16, n_pages: int | None = None,
+                 prefix_cache: bool = False):
         self.container = container
         self.params = params
         self.n_slots = int(n_slots)
@@ -70,6 +71,13 @@ class SlotEngine:
         self.name = name or container.container_id
         self.chunk = max(1, int(decode_chunk))
         self.paged = bool(paged)
+        # copy-on-write prefix page cache: requests declaring a shared
+        # leading token block (GenRequest.prefix_len) reuse each other's
+        # prefix KV pages instead of re-prefilling them
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires paged=True "
+                             "(prefix sharing is page-granular)")
 
         # ring-buffer (windowed) and recurrent caches are not right-pad safe
         # (see ServeStepBuilder.build_prefill_slot): use exact-length prefill
@@ -133,13 +141,17 @@ class SlotEngine:
         self.draining = False
         self.stopped = False
 
-        # accounting (for ps/status + the fig6 benchmark)
+        # accounting (for ps/status + the fig6/fig9 benchmarks)
         self.slots_allocated = 0
         self.slots_freed = 0
         self.decode_ticks = 0
         self.tokens_generated = 0
         self.prefill_s = 0.0
         self.decode_s = 0.0
+        self.prefill_positions = 0      # real positions actually prefilled
+        self.prefix_hits = 0
+        self.prefix_misses = 0          # cacheable requests that found no entry
+        self.prefix_tokens_saved = 0    # prefill positions skipped via sharing
 
     # -- admission ----------------------------------------------------------
     def has_free(self) -> bool:
@@ -180,14 +192,53 @@ class SlotEngine:
         return (not self.paged
                 or self.pages_needed(req) <= self.pool.capacity)
 
+    # -- prefix cache --------------------------------------------------------
+    def _prefix_block(self, req: GenRequest):
+        """(digest, block, k_usable_pages) the request could SHARE, or
+        None. Only whole, fully-written pages are shared (the suffix always
+        starts page-aligned and keeps >= 1 real token so the hit prefill
+        still has a position to sample the first token from). Frontend
+        requests/archs bypass the cache: their leading KV rows are
+        per-request embeddings, not shareable prompt pages."""
+        if not (self.prefix_cache and self.paged) or self.fe_len:
+            return None
+        if req.frontend is not None or not req.prefix_digest:
+            return None
+        P = req.prompt_len
+        k = min(req.prefix_len, P - 1) // self.page_size
+        if k < 1:
+            return None
+        return req.prefix_digest, req.prompt[:req.prefix_len], k
+
+    def prefix_hit(self, req: GenRequest, touch: bool = False):
+        """(entry, shareable_page_count) on a cache hit, else None. The
+        pool compares the full token block, so a digest collision over
+        different tokens is a MISS, never a wrong share."""
+        blk = self._prefix_block(req)
+        if blk is None:
+            return None
+        digest, block, k = blk
+        entry = self.pool.lookup(digest, block, touch=touch)
+        if entry is None:
+            return None
+        return entry, min(k, len(entry.pages))
+
     def can_start(self, req: GenRequest) -> bool:
         """Right-now feasibility: a free slot AND (paged) enough unreserved
         pool pages to cover the request's worst case. False here is
-        *backpressure*, not rejection -- the scheduler retries next tick."""
+        *backpressure*, not rejection -- the scheduler retries next tick.
+        A prefix-cache hit shrinks the footprint to the suffix pages (plus
+        the one-time cost of pinning a currently-evictable entry)."""
         if not (self.has_free() and self.fits(req)):
             return False
-        return self.pool.can_reserve(self.pages_needed(req)) \
-            if self.paged else True
+        if not self.paged:
+            return True
+        hit = self.prefix_hit(req)
+        if hit is not None:
+            entry, k = hit
+            return self.pool.can_reserve(
+                self.pages_needed(req) - k + self.pool.pin_cost(entry))
+        return self.pool.can_reserve(self.pages_needed(req))
 
     def reject_reason(self, req: GenRequest) -> str:
         """Why ``fits`` is False -- the oversized-rejection error path."""
@@ -235,45 +286,97 @@ class SlotEngine:
         req.admit_tick = tick
 
         P = req.prompt_len
-        bucket = self.bucket(P)
-        prefill = self._prefills.get(bucket)
-        if prefill is None:
-            shapes = ({"page_size": self.page_size} if self.paged
-                      else {"cache_len": self.max_len})
-            if self.fe_len:
-                shapes["frontend_len"] = self.fe_len
-            prefill = self.container.compile_serve_step(
-                *(("prefill_slot_paged",) if self.paged
-                  else ("prefill_slot",)),
-                prompt_len=bucket, **shapes)
-            self._prefills[bucket] = prefill
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :P] = req.prompt
-        fe_args = ()
-        if self.fe_len:
-            # static-width prefix buffer; real rows packed ahead of the
-            # prompt by Model.forward (fe_len=0 -> pure-token request)
-            fe = np.zeros((1, self.fe_len, self.d_model), np.float32)
-            if req.frontend is not None:
-                fe[0, :req.frontend_len] = req.frontend
-            fe_args = (jnp.asarray(fe, self.fe_dtype),
-                       jnp.int32(req.frontend_len))
-
-        t0 = time.perf_counter()
-        first, small = prefill(self.params, jnp.asarray(toks), jnp.int32(P),
-                               *fe_args)
-        start_pos = req.frontend_len + P
-        if self.paged:
-            # bulk prefix+prompt allocation, then one page-major scatter
-            self.pool.reserve(slot, self.pages_needed(req))
-            self.pool.alloc_upto(slot, start_pos - 1)
-            np_ = -(-(bucket + self.fe_len) // self.page_size)
-            row = jnp.asarray(self.pool.table[slot, :np_])
+        hit = self.prefix_hit(req, touch=True) if self.paged else None
+        if hit is not None:
+            entry, kp = hit
+            # HIT: map the cached prefix pages read-only into the slot's
+            # leading table rows and prefill ONLY the uncached suffix, with
+            # positions offset past the shared prefix. Reservation covers
+            # just the private (suffix + overshoot) pages.
+            L = kp * self.page_size
+            sfx = req.prompt[L:]
+            S = int(sfx.shape[0])               # >= 1 by _prefix_block's cap
+            # clamp so shared rows + suffix pages never outrun the table
+            bucket = min(self.bucket(S), self.max_len - L)
+            key = (bucket, L)
+            prefill = self._prefills.get(key)
+            if prefill is None:
+                prefill = self.container.compile_serve_step(
+                    "prefill_slot_paged", prompt_len=bucket,
+                    page_size=self.page_size, prefix_len=L,
+                    n_pages=self.n_pages)
+                self._prefills[key] = prefill
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :S] = sfx
+            t0 = time.perf_counter()
+            first, small = prefill(
+                self.params, self.cache, jnp.asarray(toks), jnp.int32(S),
+                jnp.asarray(entry.pages[:kp], dtype=jnp.int32))
+            # the suffix prefill READS the live pool and the scatter below
+            # DONATES it: force completion before re-using the buffer
+            first = int(jax.block_until_ready(first)[0])
+            self.pool.reserve(slot, self.pages_needed(req) - kp)
+            self.pool.share(slot, entry, kp)
+            self.pool.alloc_upto(slot, P - 1)   # private suffix pages
+            np_ = -(-bucket // self.page_size)
+            row = jnp.asarray(self.pool.table[slot, kp:kp + np_])
             self.cache = _insert_pages_jit(self.cache, small, row)
+            start_pos = P
+            self.prefix_hits += 1
+            self.prefix_tokens_saved += L
+            self.prefill_positions += S
+            self.prefill_s += time.perf_counter() - t0
         else:
-            self.cache = self._insert(self.cache, small, jnp.int32(slot))
-        first = int(jax.block_until_ready(first)[0])
-        self.prefill_s += time.perf_counter() - t0
+            bucket = self.bucket(P)
+            prefill = self._prefills.get(bucket)
+            if prefill is None:
+                shapes = ({"page_size": self.page_size} if self.paged
+                          else {"cache_len": self.max_len})
+                if self.fe_len:
+                    shapes["frontend_len"] = self.fe_len
+                prefill = self.container.compile_serve_step(
+                    *(("prefill_slot_paged",) if self.paged
+                      else ("prefill_slot",)),
+                    prompt_len=bucket, **shapes)
+                self._prefills[bucket] = prefill
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :P] = req.prompt
+            fe_args = ()
+            if self.fe_len:
+                # static-width prefix buffer; real rows packed ahead of the
+                # prompt by Model.forward (fe_len=0 -> pure-token request)
+                fe = np.zeros((1, self.fe_len, self.d_model), np.float32)
+                if req.frontend is not None:
+                    fe[0, :req.frontend_len] = req.frontend
+                fe_args = (jnp.asarray(fe, self.fe_dtype),
+                           jnp.int32(req.frontend_len))
+
+            t0 = time.perf_counter()
+            first, small = prefill(self.params, jnp.asarray(toks),
+                                   jnp.int32(P), *fe_args)
+            start_pos = req.frontend_len + P
+            if self.paged:
+                # bulk prefix+prompt allocation, then one page-major scatter
+                self.pool.reserve(slot, self.pages_needed(req))
+                self.pool.alloc_upto(slot, start_pos - 1)
+                np_ = -(-(bucket + self.fe_len) // self.page_size)
+                row = jnp.asarray(self.pool.table[slot, :np_])
+                self.cache = _insert_pages_jit(self.cache, small, row)
+            else:
+                self.cache = self._insert(self.cache, small, jnp.int32(slot))
+            first = int(jax.block_until_ready(first)[0])
+            self.prefill_s += time.perf_counter() - t0
+            self.prefill_positions += req.frontend_len + P
+            blk = self._prefix_block(req)
+            if blk is not None:
+                # MISS: promote the freshly-written, fully-covered leading
+                # prompt pages into the prefix index so later requests with
+                # the same block share them (first writer wins)
+                self.prefix_misses += 1
+                digest, block, _ = blk
+                kc = req.prefix_len // self.page_size
+                if kc >= 1:
+                    self.pool.cache_prefix(digest, block, slot, kc)
 
         req.tokens.append(first)
         self.tokens_generated += 1
@@ -385,6 +488,13 @@ class SlotEngine:
         }
         if self.paged:
             out["pool"] = self.pool.status()
+            if self.prefix_cache:
+                out["prefix_cache"] = {
+                    "hits": self.prefix_hits,
+                    "misses": self.prefix_misses,
+                    "tokens_saved": self.prefix_tokens_saved,
+                    "shared_pages": self.pool.cached_pages,
+                }
         return out
 
 
@@ -447,8 +557,12 @@ class ContinuousScheduler:
                 # keep decoding and will release pages; never preempt
                 break
             # least-loaded engine keeps replica occupancy balanced without
-            # breaking FIFO (the *request* order is still queue order)
-            eng = min(ready, key=lambda e: len(e.active))
+            # breaking FIFO (the *request* order is still queue order);
+            # an engine whose pool already caches the request's prefix wins
+            # ties-or-better (prefix affinity WITHIN the pod -- each
+            # replica's page pool is its own)
+            eng = min(ready, key=lambda e: (e.prefix_hit(req) is None,
+                                            len(e.active)))
             self.queue.pop_ready(self.tick)
             self.queue.admitted += 1
             self.admission_order.append(req.rid)

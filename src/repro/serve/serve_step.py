@@ -165,7 +165,8 @@ class ServeStepBuilder:
     # and orchestrator/page_pool.py) ----------------------------------------
 
     def build_prefill_slot_paged(self, prompt_len: int, page_size: int,
-                                 frontend_len: int = 0) -> Callable:
+                                 frontend_len: int = 0,
+                                 prefix_len: int = 0) -> Callable:
         """prefill_slot whose cache comes back PAGE-MAJOR, ready to scatter
         into the pool: each attention entry is (count, n_kv, n_prompt_pages,
         page_size, hd) with n_prompt_pages = ceil((frontend_len +
@@ -174,7 +175,50 @@ class ServeStepBuilder:
         writes row j of that tree into physical page ``table[slot, j]`` (one
         jitted scatter -- see scheduler). Padding rows beyond the true
         content carry right-pad garbage; the paged mask hides everything
-        past the written positions until decode overwrites it."""
+        past the written positions until decode overwrites it.
+
+        With ``prefix_len`` > 0 (prefix-cache hit) this becomes the SUFFIX
+        prefill: ``tokens`` are only the uncached tail of the prompt
+        (bucketed to ``prompt_len``), the signature gains the live page
+        pool plus the (prefix_len / page_size,) physical page ids of the
+        cached prefix, query positions are offset past the prefix, and the
+        returned page-major cache covers the suffix pages only -- the host
+        scatters them into table rows starting AFTER the shared rows."""
+        if prefix_len:
+            if frontend_len:
+                raise NotImplementedError(
+                    "prefix-cached suffix prefill does not compose with "
+                    "frontend embeddings")
+            if prefix_len % page_size:
+                raise ValueError("shared prefix must cover whole pages")
+            span = prompt_len                  # the suffix bucket
+            vocab = self.model.cfg.vocab_size
+            np_ = -(-span // page_size)
+            pad = np_ * page_size - span
+
+            def prefill_suffix_paged(params, pool, tokens, length,
+                                     prefix_pages):
+                logits, cache, _ = self.model.forward(
+                    params, tokens, collect_cache=True, cache_len=span,
+                    prefix_kv=pool, prefix_pages=prefix_pages,
+                    prefix_len=prefix_len)
+                last = jnp.take_along_axis(
+                    logits, jnp.asarray(length - 1).reshape(-1, 1, 1),
+                    axis=1)[:, 0]
+                first = greedy_sample(last, vocab)
+
+                def to_pages(e):
+                    e = e[:, 0]
+                    if pad:
+                        e = jnp.pad(e, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    cnt, _, n_kv, hd = e.shape
+                    e = e.reshape(cnt, np_, page_size, n_kv, hd)
+                    return e.transpose(0, 3, 1, 2, 4)
+
+                return first, jax.tree.map(to_pages, cache)
+
+            return prefill_suffix_paged
+
         span = prompt_len + frontend_len
         inner = self.build_prefill_slot(span, frontend_len)
         np_ = -(-span // page_size)

@@ -192,6 +192,26 @@ def test_frontend_rejections(rt):
     assert fine.state == "done"
 
 
+def test_prefix_cache_on_off_parity_on_shared_frontend_trace(rt):
+    """Frontend requests bypass the prefix page cache (their leading KV
+    rows are per-request embeddings, not shareable prompt pages): enabling
+    --prefix-cache on the shared frontend trace -- even with a declared
+    shared token block -- changes no tokens and records no hits."""
+    outs = {}
+    with redirect_stdout(io.StringIO()):
+        for cache in (False, True):
+            args = _serve_args(paged=True)
+            args.prefix_cache = cache
+            args.shared_prefix = 16
+            outs[cache] = serve_continuous(rt, "musicgen-medium-smoke", args)
+    assert len(outs[False]["request_tokens"]) == 7
+    assert outs[False]["request_tokens"] == outs[True]["request_tokens"]
+    assert outs[True]["prefix_cache"]["enabled"]
+    assert outs[True]["prefix_cache"]["hits"] == 0
+    assert outs[True]["prefix_cache"]["misses"] == 0
+    assert outs[True]["prefill_positions"] == outs[False]["prefill_positions"]
+
+
 def test_frontend_span_counts_against_max_len(rt):
     """Admission accounts the STATIC frontend buffer in the request span:
     a prompt+gen that would fit a text slot is rejected when the frontend

@@ -1,0 +1,313 @@
+"""Refcounted PagePool property/invariant suite (the PR's foregrounded
+test work).
+
+Random interleaved reserve/share/alloc/COW/release schedules must keep the
+full ``check()`` invariant set after EVERY operation: no page both free and
+referenced, refcounts equal to page-table occurrences, reservations always
+coverable, and full reclaim after all releases (plus draining the prefix
+index) returns every page. Plus the adversarial cases: digest collisions
+miss on the full-block compare, LRU eviction under pool pressure never
+frees a page with live refs, and releasing one sharer never clobbers
+another sharer's mapped prefix pages (the PR's release() audit).
+
+Runs under the orchestrator marker (pure host bookkeeping, no device work).
+"""
+
+import numpy as np
+import pytest
+
+from repro.orchestrator.page_pool import GARBAGE_PAGE, PagePool
+
+pytestmark = pytest.mark.orchestrator
+
+
+def _block(rng, n):
+    return rng.integers(0, 512, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# randomized schedules
+# ---------------------------------------------------------------------------
+
+def test_random_share_cow_schedules_conserve_pages():
+    """800 random admit(miss)/admit(hit)/extend/COW/release/promote steps:
+    pages are conserved across the free-list, private ownership and the
+    prefix index; ``check()`` asserts the invariants after every op; after
+    releasing every slot and dropping the index the pool is fully drained."""
+    rng = np.random.default_rng(0)
+    ps = 8
+    pool = PagePool(n_pages=41, page_size=ps, n_slots=6, max_pages=16)
+    hi = {}          # slot -> high-water written position
+    goal = {}        # slot -> total page rows the slot may cover
+    digests = [f"d{i}" for i in range(4)]
+    blocks = {d: _block(rng, ps * (1 + i % 3)) for i, d in enumerate(digests)}
+
+    for _ in range(800):
+        op = rng.integers(0, 5)
+        busy = list(hi)
+        free_slots = [s for s in range(6) if s not in hi]
+        if op == 0 and free_slots:              # admit, maybe via the cache
+            slot = int(rng.choice(free_slots))
+            d = str(rng.choice(digests))
+            entry = pool.lookup(d, blocks[d], touch=True)
+            total = int(rng.integers(2, 10))
+            if entry is not None:
+                k = min(len(entry.pages), total - 1)
+                if k >= 1 and pool.can_reserve(total - k + pool.pin_cost(entry)):
+                    pool.reserve(slot, total - k)
+                    pool.share(slot, entry, k)
+                    goal[slot] = total
+                    hi[slot] = k * ps           # first private write position
+                    pool.alloc_upto(slot, hi[slot])
+            elif pool.can_reserve(total):
+                pool.reserve(slot, total)
+                goal[slot] = total
+                hi[slot] = int(rng.integers(0, total * ps))
+                pool.alloc_upto(slot, hi[slot])
+                # sometimes promote the leading fully-written pages
+                kc = min(len(blocks[d]) // ps, (hi[slot] + 1) // ps)
+                if kc >= 1 and rng.integers(0, 2):
+                    pool.cache_prefix(d, blocks[d], slot, kc)
+        elif op == 1 and busy:                  # decode: extend alloc-on-write
+            slot = int(rng.choice(busy))
+            cap = (len(pool.shared[slot]) + int(pool.reserved[slot])) * ps - 1
+            hi[slot] = min(cap, hi[slot] + int(rng.integers(1, 5)))
+            pool.alloc_upto(slot, hi[slot])
+        elif op == 2 and busy:                  # release
+            slot = int(rng.choice(busy))
+            pool.release(slot)
+            del hi[slot], goal[slot]
+        elif op == 3 and busy:                  # copy-on-write a shared row
+            slot = int(rng.choice(busy))
+            if pool.shared[slot] and \
+                    len(pool.owned[slot]) < pool.reserved[slot] and \
+                    (pool.free or pool.evictable_pages):
+                old, new = pool.cow(slot)
+                assert old != new and new not in pool.free
+                assert pool.table[slot, len(pool.shared[slot])] == new
+        elif op == 4:                           # cold lookups never mutate
+            d = str(rng.choice(digests))
+            pool.lookup(d, blocks[d])
+        pool.check()
+
+    for slot in list(hi):
+        pool.release(slot)
+        pool.check()
+    assert pool.total_owned == 0 and pool.total_reserved == 0
+    # cached pages survive full release (warm cache) ...
+    assert pool.in_use == pool.cached_pages
+    # ... and draining the index reclaims every page
+    pool.drop_prefixes()
+    pool.check()
+    assert pool.in_use == 0 and len(pool.free) == pool.capacity
+    assert not pool.prefix
+    assert pool.pages_allocated == pool.pages_freed > 0
+
+
+def test_refcounts_match_table_occurrences():
+    """Three sharers of one prefix: refcount tracks the mapping count
+    exactly, and every mapped row resolves to the cached page."""
+    ps = 4
+    pool = PagePool(n_pages=17, page_size=ps, n_slots=4, max_pages=8)
+    blk = _block(np.random.default_rng(1), 2 * ps)
+    pool.reserve(0, 4)
+    pool.alloc_upto(0, 3 * ps - 1)
+    assert pool.cache_prefix("d", blk, 0, 2)
+    entry = pool.lookup("d", blk)
+    for slot in (1, 2):
+        pool.reserve(slot, 2)
+        pool.share(slot, entry, 2)
+        pool.alloc_upto(slot, 2 * ps)
+    pool.check()
+    for p in entry.pages:
+        assert pool.refcount[p] == 3            # promoter + two sharers
+        assert sum(int(pool.table[s, j]) == p
+                   for s in range(4) for j in range(8)) == 3
+    pool.release(0)
+    pool.check()
+    assert all(pool.refcount[p] == 2 for p in entry.pages)
+
+
+# ---------------------------------------------------------------------------
+# adversarial: collisions, eviction, sharer isolation
+# ---------------------------------------------------------------------------
+
+def test_digest_collision_on_differing_tokens_misses():
+    """Same digest, different token block: lookup must MISS (full-block
+    compare), never serve the other block's pages -- for both a different
+    length and a same-length, different-content block."""
+    rng = np.random.default_rng(2)
+    ps = 4
+    pool = PagePool(n_pages=17, page_size=ps, n_slots=2, max_pages=8)
+    blk = _block(rng, 2 * ps)
+    pool.reserve(0, 4)
+    pool.alloc_upto(0, 3 * ps - 1)
+    assert pool.cache_prefix("collide", blk, 0, 2)
+    assert pool.lookup("collide", blk) is not None
+    other = blk.copy()
+    other[3] += 1
+    assert pool.lookup("collide", other) is None
+    assert pool.lookup("collide", blk[:ps]) is None
+    assert pool.lookup("collide", np.concatenate([blk, blk[:1]])) is None
+    # a colliding promotion does not overwrite the resident entry
+    pool.release(0)
+    pool.reserve(1, 4)
+    pool.alloc_upto(1, 3 * ps - 1)
+    assert not pool.cache_prefix("collide", other, 1, 2)
+    got = pool.lookup("collide", blk)
+    assert got is not None and np.array_equal(got.tokens, blk)
+    pool.check()
+
+
+def test_eviction_under_pressure_never_frees_live_refs():
+    """Pool pressure evicts refcount-0 prefixes LRU-first; a prefix with a
+    live sharer survives every eviction, and when nothing is evictable the
+    allocator fails cleanly instead of stealing."""
+    rng = np.random.default_rng(3)
+    ps = 4
+    # capacity 12 = three 2-page prefixes + 6 private
+    pool = PagePool(n_pages=13, page_size=ps, n_slots=4, max_pages=16)
+    blocks = {d: _block(rng, 2 * ps) for d in ("a", "b", "c")}
+    for slot, d in enumerate(blocks):
+        pool.reserve(slot, 2)
+        pool.alloc_upto(slot, 2 * ps - 1)
+        assert pool.cache_prefix(d, blocks[d], slot, 2)
+    # LRU order: touch "a" so "b" is the coldest refcount-0 entry
+    pool.lookup("a", blocks["a"], touch=True)
+    live = pool.lookup("c", blocks["c"], touch=True)
+    pool.reserve(3, 2)
+    pool.share(3, live, 2)                      # "c" now has a live sharer
+    for slot in range(3):
+        pool.release(slot)
+    pool.check()
+    assert pool.cached_pages == 6 and len(pool.free) == 6
+
+    # headroom respects the live sharer's outstanding promise (2 pages):
+    # 6 free + 4 evictable - 2 promised = 8, never 10
+    assert pool.free_unreserved == 8
+    assert not pool.can_reserve(9)
+    # demand 8 private pages: drains the free list then evicts the
+    # COLDEST refcount-0 prefix ("b"); "a" (touched) and "c" (live) survive
+    pool.reserve(0, 8)
+    pool.alloc_upto(0, 8 * ps - 1)
+    pool.check()
+    assert "b" not in pool.prefix and {"a", "c"} <= set(pool.prefix)
+    assert pool.evictions == 1
+    # the live sharer now extends into its promised pages: pressure evicts
+    # "a" next -- and NEVER "c", whose pages slot 3 still maps
+    pool.alloc_upto(3, 4 * ps - 1)
+    pool.check()
+    assert "a" not in pool.prefix and "c" in pool.prefix
+    assert pool.evictions == 2
+    live_pages = set(live.pages)
+    assert not (live_pages & set(pool.free))
+    assert all(pool.table[3, j] == p for j, p in enumerate(live.pages))
+    # nothing evictable left and the free list is dry: admission fails
+    # cleanly instead of stealing a live page
+    assert not pool.can_reserve(1)
+    with pytest.raises(RuntimeError):
+        pool.reserve(1, 1)
+    pool.check()
+
+
+def test_release_one_sharer_keeps_other_sharers_pages():
+    """The release() audit (PR bugfix): releasing one sharer frees ONLY its
+    private pages -- the shared prefix pages stay out of the free list and
+    the surviving sharer's table rows still resolve to them, so a
+    subsequent allocation cannot clobber a live prefix."""
+    rng = np.random.default_rng(4)
+    ps = 4
+    pool = PagePool(n_pages=21, page_size=ps, n_slots=3, max_pages=16)
+    blk = _block(rng, 2 * ps)
+    pool.reserve(0, 5)
+    pool.alloc_upto(0, 4 * ps - 1)
+    assert pool.cache_prefix("sys", blk, 0, 2)
+    entry = pool.lookup("sys", blk)
+    pool.reserve(1, 3)
+    pool.share(1, entry, 2)
+    pool.alloc_upto(1, 4 * ps - 1)
+    survivor_rows = [int(pool.table[1, j]) for j in range(4)]
+
+    pool.release(0)                             # one sharer exits
+    pool.check()
+    assert not (set(entry.pages) & set(pool.free)), \
+        "release() freed pages another sharer still maps"
+    assert [int(pool.table[1, j]) for j in range(4)] == survivor_rows
+    assert all(pool.refcount[p] == 1 for p in entry.pages)
+
+    # hammer the free list: new exclusive allocations must not receive the
+    # shared pages while slot 1 still maps them
+    pool.reserve(2, 10)
+    pool.alloc_upto(2, 10 * ps - 1)
+    assert not (set(entry.pages) & set(pool.owned[2]))
+    pool.check()
+    pool.release(1)
+    pool.release(2)
+    pool.check()
+    assert pool.in_use == pool.cached_pages == 2   # warm, evictable now
+
+
+def test_cow_remaps_last_shared_row():
+    """COW gives a sharer a private copy of its last shared page: the table
+    row flips to the new page, the old page stays cached for the other
+    sharers, and the copy draws against the slot's reservation."""
+    rng = np.random.default_rng(5)
+    ps = 4
+    pool = PagePool(n_pages=17, page_size=ps, n_slots=3, max_pages=8)
+    blk = _block(rng, 2 * ps)
+    pool.reserve(0, 4)
+    pool.alloc_upto(0, 3 * ps - 1)
+    assert pool.cache_prefix("sys", blk, 0, 2)
+    entry = pool.lookup("sys", blk)
+    pool.reserve(1, 3)
+    pool.share(1, entry, 2)
+    old_expected = entry.pages[1]
+    old, new = pool.cow(1)
+    assert old == old_expected and new != old
+    assert pool.table[1, 1] == new and pool.table[1, 0] == entry.pages[0]
+    assert pool.refcount[old] == 1              # only the promoter now
+    assert pool.table[0, 1] == old              # other sharer untouched
+    assert pool.cow_copies == 1
+    pool.check()
+    # reservation accounting: the copy + remaining rows still bounded
+    pool.alloc_upto(1, 3 * ps - 1)
+    pool.check()
+    with pytest.raises(RuntimeError):
+        pool.alloc_upto(1, 6 * ps - 1)          # beyond the reservation
+    pool.release(0)
+    pool.release(1)
+    pool.check()
+    assert pool.in_use == pool.cached_pages
+
+
+def test_share_requires_clean_slot_and_valid_count():
+    rng = np.random.default_rng(6)
+    ps = 4
+    pool = PagePool(n_pages=17, page_size=ps, n_slots=2, max_pages=8)
+    blk = _block(rng, 2 * ps)
+    pool.reserve(0, 4)
+    pool.alloc_upto(0, 3 * ps - 1)
+    assert pool.cache_prefix("d", blk, 0, 2)
+    entry = pool.lookup("d", blk)
+    with pytest.raises(RuntimeError):
+        pool.share(0, entry, 1)                 # slot already maps pages
+    pool.reserve(1, 2)
+    with pytest.raises(ValueError):
+        pool.share(1, entry, 3)                 # more pages than cached
+    pool.share(1, entry, 2)
+    pool.check()
+
+
+def test_garbage_page_never_cached_or_shared():
+    rng = np.random.default_rng(7)
+    pool = PagePool(n_pages=9, page_size=4, n_slots=1, max_pages=8)
+    pool.reserve(0, 4)
+    pool.alloc_upto(0, 15)
+    assert pool.cache_prefix("d", _block(rng, 8), 0, 2)
+    assert GARBAGE_PAGE not in pool.shared[0]
+    for e in pool.prefix.values():
+        assert GARBAGE_PAGE not in e.pages
+    pool.release(0)
+    pool.drop_prefixes()
+    pool.check()
+    assert len(pool.free) == pool.capacity

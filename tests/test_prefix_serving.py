@@ -1,0 +1,326 @@
+"""Copy-on-write prefix page cache through the paged serving stack.
+
+The serving analogue of the paper's shared immutable image layers: requests
+declaring the same leading token block (a fleet system prompt) share its KV
+pages copy-on-write instead of re-prefilling them. These tests pin the
+acceptance bars end-to-end: tokens are identical with the cache on vs off
+(the suffix prefill with offset positions changes nothing observable), hits
+skip exactly the shared positions, a digest collision over different tokens
+misses (full-block compare), the whole-prompt edge keeps one real suffix
+token, and the warm cache survives request completion.
+"""
+
+import io
+from contextlib import redirect_stdout
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.runtime import Runtime
+from repro.orchestrator import ContinuousScheduler, GenRequest, Pod
+
+pytestmark = pytest.mark.orchestrator
+
+IMAGEFILE = """
+FROM scratch
+ARCH llama3.2-3b-smoke
+SHAPE decode_32k seq_len=64 global_batch=4
+MESH local
+PRECISION compute=float32 params=float32
+COLLECTIVES generic
+"""
+
+PS = 8                       # page size used throughout
+SHARED = 20                  # system-prompt tokens: 2 whole pages + remainder
+
+
+@pytest.fixture(scope="module")
+def rt(tmp_path_factory):
+    rt = Runtime(tmp_path_factory.mktemp("stevedore"))
+    rt.build(IMAGEFILE, tag="stable")
+    return rt
+
+
+def _pod(rt, prefix_cache, **kw):
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("max_len", 64)
+    return Pod(rt, "stable", replicas=1, paged=True, page_size=PS,
+               prefix_cache=prefix_cache, **kw)
+
+
+def _shared_trace(n=6, seed=1):
+    rng = np.random.default_rng(seed)
+    shared = np.random.default_rng(99).integers(0, 256, SHARED)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, 256, int(rng.integers(3, 10)))
+        reqs.append(GenRequest(rid=i, prompt=np.concatenate([shared, tail]),
+                               max_new_tokens=int(rng.integers(2, 6)),
+                               prefix_len=SHARED))
+    return reqs
+
+
+def _run(pod, reqs, max_ticks=2000):
+    sched = ContinuousScheduler(pod)
+    sched.submit(reqs)
+    sched.run(max_ticks=max_ticks)
+    assert all(r.state == "done" for r in reqs), [r.state for r in reqs]
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# parity + hit accounting
+# ---------------------------------------------------------------------------
+
+def test_cache_on_off_token_parity_with_hits(rt):
+    """The acceptance bar: bitwise-identical request tokens with the cache
+    on vs off, with real hits (suffix-only prefill) on the cached run."""
+    results = {}
+    for cache in (False, True):
+        pod = _pod(rt, cache)
+        reqs = _shared_trace()
+        _run(pod, reqs)
+        eng = pod.engines[0]
+        eng.pool.check()
+        results[cache] = [list(r.tokens) for r in reqs]
+        if cache:
+            # every request after the first (miss, promotes) hits
+            assert eng.prefix_hits == len(reqs) - 1
+            assert eng.prefix_misses == 1
+            # each hit skipped the whole-page floor of the shared block
+            assert eng.prefix_tokens_saved == \
+                (len(reqs) - 1) * (SHARED // PS) * PS
+            # only the cached prefix pages stay resident after the trace
+            assert eng.pool.in_use == eng.pool.cached_pages == SHARED // PS
+        else:
+            assert eng.prefix_hits == eng.prefix_misses == 0
+            assert eng.pool.in_use == 0
+        assert sorted(eng.free) == list(range(eng.n_slots))
+    assert results[False] == results[True]
+
+
+def test_hits_skip_prefill_positions(rt):
+    """prefill_positions counts only what was actually computed: the cached
+    run computes SHARED fewer positions per hit than the cold run."""
+    counts = {}
+    for cache in (False, True):
+        pod = _pod(rt, cache)
+        reqs = _shared_trace()
+        _run(pod, reqs)
+        counts[cache] = pod.engines[0].prefill_positions
+    total = sum(r.prompt_len for r in _shared_trace())
+    assert counts[False] == total
+    saved = (len(_shared_trace()) - 1) * (SHARED // PS) * PS
+    assert counts[True] == total - saved
+
+
+def test_warm_cache_survives_completion_and_rehits(rt):
+    """Refcount-0 cached pages stay resident after every sharer exits: a
+    request arriving later still hits the warm entry."""
+    pod = _pod(rt, True)
+    first = _shared_trace(n=1)
+    _run(pod, first)
+    eng = pod.engines[0]
+    assert eng.prefix_misses == 1 and eng.prefix_hits == 0
+    assert eng.pool.in_use == eng.pool.cached_pages        # warm, refs 0
+    late = _shared_trace(n=2, seed=7)
+    _run(pod, late)
+    assert eng.prefix_hits == 2
+    eng.pool.check()
+
+
+def test_replica_prefix_affinity_within_pod(rt):
+    """With two replicas (two pools), admission prefers the engine whose
+    pool already caches the request's prefix over plain least-loaded."""
+    pod = Pod(rt, "stable", replicas=2, n_slots=2, max_len=64, paged=True,
+              page_size=PS, prefix_cache=True)
+    sched = ContinuousScheduler(pod)
+    reqs = _shared_trace(n=3)
+    sched.submit(reqs[0])
+    sched.run(max_ticks=500)
+    sched.submit(reqs[1:])
+    sched.run(max_ticks=500)
+    assert len({r.replica for r in reqs}) == 1, \
+        "prefix hits were scattered across replica pools"
+    hits = sum(e.prefix_hits for e in pod.engines)
+    assert hits == 2
+
+
+# ---------------------------------------------------------------------------
+# adversarial edges
+# ---------------------------------------------------------------------------
+
+def test_digest_collision_at_engine_misses_and_stays_correct(rt):
+    """Two requests forced onto the SAME digest with different blocks: the
+    second must miss (full-block compare) and decode exactly the tokens an
+    uncached engine produces for its prompt."""
+    rng = np.random.default_rng(11)
+    block_a = rng.integers(0, 256, 16)
+    block_b = rng.integers(0, 256, 16)
+    assert not np.array_equal(block_a, block_b)
+    tail = rng.integers(0, 256, 5)
+    r1 = GenRequest(rid=0, prompt=np.concatenate([block_a, tail]),
+                    max_new_tokens=4, prefix_len=16)
+    r2 = GenRequest(rid=1, prompt=np.concatenate([block_b, tail]),
+                    max_new_tokens=4, prefix_len=16)
+    r2.prefix_digest = r1.prefix_digest        # forced collision
+
+    pod = _pod(rt, True)
+    _run(pod, [r1])
+    _run(pod, [r2])
+    eng = pod.engines[0]
+    assert eng.prefix_hits == 0 and eng.prefix_misses == 2
+    eng.pool.check()
+
+    ref = GenRequest(rid=2, prompt=np.concatenate([block_b, tail]),
+                     max_new_tokens=4)
+    _run(_pod(rt, False), [ref])
+    assert list(r2.tokens) == list(ref.tokens), \
+        "collision served another block's prefix pages"
+
+
+def test_whole_prompt_equals_prefix_keeps_one_suffix_token(rt):
+    """prompt == declared block (page-aligned): the hit caps its share so
+    at least one real token remains to prefill (the position the first
+    sampled token comes from), and tokens still match the uncached run."""
+    block = np.random.default_rng(13).integers(0, 256, 2 * PS)
+    mk = lambda rid: GenRequest(rid=rid, prompt=block.copy(),
+                                max_new_tokens=4, prefix_len=2 * PS)
+    pod = _pod(rt, True)
+    _run(pod, [mk(0)])
+    hit_req = mk(1)
+    _run(pod, [hit_req])
+    eng = pod.engines[0]
+    assert eng.prefix_hits == 1
+    # shared only the first page: the second holds the last real token
+    assert eng.prefix_tokens_saved == PS
+    ref = mk(2)
+    _run(_pod(rt, False), [ref])
+    assert list(hit_req.tokens) == list(ref.tokens)
+
+
+def test_sub_page_prefix_never_caches(rt):
+    """A declared block smaller than one page has no whole page to share:
+    no promotion, no hit, correct tokens."""
+    rng = np.random.default_rng(17)
+    block = rng.integers(0, 256, PS - 1)
+    reqs = [GenRequest(rid=i,
+                       prompt=np.concatenate([block,
+                                              rng.integers(0, 256, 4)]),
+                       max_new_tokens=3, prefix_len=PS - 1)
+            for i in range(2)]
+    pod = _pod(rt, True)
+    _run(pod, reqs)
+    eng = pod.engines[0]
+    assert eng.prefix_hits == 0 and eng.pool.cached_pages == 0
+    eng.pool.check()
+
+
+def test_eviction_under_serving_pressure_keeps_parity(rt):
+    """A pool too small to keep every prefix resident evicts cold entries
+    mid-trace; requests still complete with the exact uncached tokens."""
+    rng = np.random.default_rng(19)
+    blocks = [rng.integers(0, 256, 2 * PS) for _ in range(3)]
+
+    def trace():
+        out = []
+        for i in range(9):
+            blk = blocks[i % 3]
+            tail = np.random.default_rng(100 + i).integers(0, 256, 4)
+            out.append(GenRequest(rid=i, prompt=np.concatenate([blk, tail]),
+                                  max_new_tokens=3, prefix_len=2 * PS))
+        return out
+
+    results = {}
+    for cache in (False, True):
+        # tight pool: ~enough for 2 in-flight requests + 2 cached prefixes
+        pod = Pod(rt, "stable", replicas=1, n_slots=2, max_len=64,
+                  paged=True, page_size=PS, n_pages=13, prefix_cache=cache)
+        reqs = trace()
+        _run(pod, reqs, max_ticks=5000)
+        pod.engines[0].pool.check()
+        results[cache] = [list(r.tokens) for r in reqs]
+    assert results[False] == results[True]
+
+
+def test_chunked_attend_honors_suffix_position_offset():
+    """The flash-style chunked softmax skips fully-causal KV chunks at
+    trace time assuming 0-based q positions; the suffix prefill's queries
+    start at the prefix length instead. With the offset threaded through
+    (attend(q_offset=)) the chunked path matches the dense one; ignoring
+    it (the would-be bug) silently drops every prefix chunk past the
+    0-based horizon."""
+    import math
+    from repro.models.attention import _sdpa_chunked, _sdpa_dense
+    rng = np.random.default_rng(23)
+    B, Hkv, G, hd = 1, 2, 2, 16
+    L, S = 96, 8                                  # prefix, suffix
+    scale = 1.0 / math.sqrt(hd)
+    q = rng.standard_normal((B, S, Hkv, G, hd)).astype(np.float32)
+    k = rng.standard_normal((B, L + S, Hkv, hd)).astype(np.float32)
+    v = rng.standard_normal((B, L + S, Hkv, hd)).astype(np.float32)
+    q_pos = (L + np.arange(S))[None, :]
+    k_pos = np.arange(L + S)[None, :]
+    dense = np.asarray(_sdpa_dense(q, k, v, q_pos, k_pos, 0, scale))
+    good = np.asarray(_sdpa_chunked(
+        q, k, v, q_pos, k_pos, 0, scale,
+        q_chunk=16, kv_chunk=32, q_offset=L))
+    np.testing.assert_allclose(good, dense, atol=3e-5)
+    wrong = np.asarray(_sdpa_chunked(
+        q, k, v, q_pos, k_pos, 0, scale,
+        q_chunk=16, kv_chunk=32, q_offset=0))
+    assert not np.allclose(wrong, dense), \
+        "0-based skipping should have dropped visible prefix chunks"
+
+
+# ---------------------------------------------------------------------------
+# driver-level parity (serve --prefix-cache)
+# ---------------------------------------------------------------------------
+
+def _serve_args(**kw):
+    args = SimpleNamespace(slots=3, prompt_len=8, gen=6, requests=6, seed=0,
+                           platform=None, replicas=1, fairness_cap=4,
+                           arrive_per_tick=8, paged=True, page_size=8,
+                           prefix_cache=False, shared_prefix=16, pods=1,
+                           policy="shortest-queue")
+    for k, v in kw.items():
+        setattr(args, k, v)
+    return args
+
+
+def test_cli_serve_prefix_cache_forwards_page_size(rt, capsys):
+    """Regression: `repro serve --prefix-cache --page-size N` without an
+    explicit --paged must still forward the page size (prefix-cache
+    implies paged downstream); `ps` then shows the hit counters and the
+    page-granular shared count."""
+    from repro.cli import main as cli_main
+    root = str(rt.root)
+    assert cli_main(["--root", root, "serve", "stable", "--replicas", "1",
+                     "--slots", "3", "--requests", "4", "--prompt-len", "6",
+                     "--gen", "3", "--prefix-cache", "--shared-prefix", "16",
+                     "--page-size", "8"]) == 0
+    out = capsys.readouterr().out
+    assert "prefix cache: 3 hits / 1 misses" in out
+    # 16-token block at page size 8 = 2 whole pages (16 positions) per hit
+    assert "48 prefill tokens skipped" in out
+    assert cli_main(["--root", root, "ps"]) == 0
+    ps = capsys.readouterr().out
+    assert "phits=3/1 shared=2" in ps
+
+
+def test_serve_driver_prefix_cache_parity(rt):
+    """`serve --paged --shared-prefix N` with and without --prefix-cache:
+    identical request tokens, and the cached run reports hits + saved
+    prefill tokens in its output."""
+    from repro.launch.serve import serve_continuous
+    with redirect_stdout(io.StringIO()):
+        cold = serve_continuous(rt, "stable", _serve_args())
+        warm = serve_continuous(rt, "stable",
+                                _serve_args(prefix_cache=True))
+    assert cold["request_tokens"] == warm["request_tokens"]
+    assert not cold["prefix_cache"]["enabled"]
+    assert warm["prefix_cache"]["enabled"]
+    assert warm["prefix_cache"]["hits"] >= 1
+    assert warm["prefix_cache"]["tokens_saved"] > 0
+    assert warm["prefill_positions"] < cold["prefill_positions"]

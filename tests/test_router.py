@@ -288,7 +288,8 @@ def test_fleet_state_reads_as_one_unit(rt):
 # routed serving parity
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("policy", ["shortest-queue", "consistent-hash"])
+@pytest.mark.parametrize("policy", ["shortest-queue", "consistent-hash",
+                                    "prefix-hash"])
 def test_routed_parity_with_static_on_shared_trace(rt, policy):
     """Routing must not change tokens: --pods 2 replays the shared
     frontend trace (tests/test_frontend_serving.py) token-identical to the
@@ -312,3 +313,101 @@ def test_routed_parity_with_static_on_shared_trace(rt, policy):
     assert routed["request_tokens"] == single["request_tokens"]
     assert routed["request_tokens"] == static["request_tokens"]
     assert routed["fleet"]["pods"] and routed["fleet"]["rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# prefix-hash placement (prefix-cache affinity)
+# ---------------------------------------------------------------------------
+
+def _prefix_fleet(rt, n_pods=3, *, prefix_cache=True, n_slots=2,
+                  max_len=64, **kw):
+    pods = [Pod(rt, "stable", replicas=1, n_slots=n_slots, max_len=max_len,
+                paged=True, page_size=8, prefix_cache=prefix_cache)
+            for _ in range(n_pods)]
+    return PodRouter(pods, policy="prefix-hash", **kw)
+
+
+def _prefix_trace(shared, n, *, base_rid=0, seed=0, prefix_len=None):
+    rng = np.random.default_rng(seed)
+    return [GenRequest(
+        rid=base_rid + i,
+        prompt=np.concatenate([shared, rng.integers(0, 256,
+                                                    int(rng.integers(3, 8)))]),
+        max_new_tokens=int(rng.integers(2, 5)),
+        prefix_len=prefix_len if prefix_len is not None else len(shared))
+        for i in range(n)]
+
+
+def test_prefix_hash_places_by_digest_with_rid_fallback(rt):
+    """Every request sharing a prefix digest lands on ONE pod (cache
+    affinity); digest-less requests fall back to rid-hash and spread."""
+    router = _prefix_fleet(rt)
+    shared_a = np.arange(100, 116)
+    shared_b = np.arange(200, 216)
+    a = _prefix_trace(shared_a, 8, base_rid=0, seed=1)
+    b = _prefix_trace(shared_b, 8, base_rid=100, seed=2)
+    plain = [GenRequest(rid=1000 + i, prompt=np.arange(1, 6),
+                        max_new_tokens=2) for i in range(40)]
+    router.submit(a + b + plain)
+    assert len({r.pod for r in a}) == 1, "digest family split across pods"
+    assert len({r.pod for r in b}) == 1
+    assert len({r.pod for r in plain}) > 1, "rid fallback lost the spread"
+    router.run(max_ticks=5000)
+    assert all(r.state == "done" for r in a + b + plain)
+    # affinity made the cache work: one miss per family, rest hits
+    hits = sum(e.prefix_hits for p in router.pods for e in p.engines)
+    misses = sum(e.prefix_misses for p in router.pods for e in p.engines)
+    assert misses == 2 and hits == 14
+
+
+def test_prefix_hash_parity_with_uncached_routing(rt):
+    """prefix-hash + prefix-cache must not change tokens: the same shared
+    trace routed with caching off (same policy) is token-identical."""
+    shared = np.arange(50, 70)
+    results = []
+    for cache in (False, True):
+        router = _prefix_fleet(rt, prefix_cache=cache)
+        reqs = _prefix_trace(shared, 10, seed=3)
+        router.submit(reqs)
+        router.run(max_ticks=5000)
+        assert all(r.state == "done" for r in reqs)
+        results.append([list(r.tokens) for r in reqs])
+    assert results[0] == results[1]
+
+
+def test_draining_pod_prefixes_rematerialize_on_spillover(rt):
+    """Drain the pod that owns a cached prefix: new same-prefix traffic
+    walks to the ring successor, misses once, re-materializes the prefix
+    in THAT pod's pool, then hits there -- and returns home on undrain."""
+    router = _prefix_fleet(rt)
+    shared = np.arange(300, 324)
+    warm = _prefix_trace(shared, 3, base_rid=0, seed=4)
+    router.submit(warm)
+    router.run(max_ticks=5000)
+    home = next(p for p in router.pods if p.pod_id == warm[0].pod)
+    assert all(r.pod == home.pod_id for r in warm)
+    assert home.engines[0].prefix_misses == 1
+    assert home.engines[0].prefix_hits == 2
+    assert home.engines[0].pool.cached_pages > 0
+
+    router.drain_pod(home)
+    moved = _prefix_trace(shared, 3, base_rid=100, seed=5)
+    router.submit(moved)
+    router.run(max_ticks=5000)
+    assert all(r.state == "done" for r in moved)
+    spill = next(p for p in router.pods if p.pod_id == moved[0].pod)
+    assert spill is not home, "drained pod still took prefix traffic"
+    assert len({r.pod for r in moved}) == 1
+    # the prefix re-materialized on the spillover pod: one miss, then hits
+    assert spill.engines[0].prefix_misses == 1
+    assert spill.engines[0].prefix_hits == 2
+    assert spill.engines[0].pool.cached_pages > 0
+
+    router.undrain_pod(home)
+    back = _prefix_trace(shared, 2, base_rid=200, seed=6)
+    router.submit(back)
+    router.run(max_ticks=5000)
+    assert all(r.pod == home.pod_id for r in back)
+    # home pool still warm from before the drain: straight hits
+    assert home.engines[0].prefix_misses == 1
+    assert home.engines[0].prefix_hits == 4
