@@ -86,6 +86,10 @@ def run() -> list[tuple[str, float, str]]:
         reqs = _trace(rng, cfg.vocab_size)
         eng.decode_s = eng.prefill_s = 0.0
         t0 = eng.decode_ticks
+        # fresh span log per rep: the tick clock restarts with the
+        # scheduler, so every rep records the identical spans and the
+        # last rep's log stands for all of them
+        pod.trace.clear()
         # fresh scheduler per rep: tick restarts at 0, stagger honored
         sched = ContinuousScheduler(pod, fairness_cap=4)
         sched.submit(reqs)
@@ -93,6 +97,10 @@ def run() -> list[tuple[str, float, str]]:
         if best is None or eng.decode_s < best[0]:
             best = (eng.decode_s, eng.decode_ticks - t0, reqs)
     cont_s, cont_ticks, reqs = best
+    # TTFT / inter-token latency decomposition from the span log (ticks
+    # are identical across reps -- only wall time varies)
+    from repro.orchestrator.obs import decomposition
+    decomp = decomposition([pod.trace])
     cont_tokens = sum(len(r.tokens) for r in reqs)
     # latency from arrival (the stagger is offered load, not queueing
     # delay); nearest-rank percentiles shared with serve.py and fig8
@@ -125,7 +133,9 @@ def run() -> list[tuple[str, float, str]]:
         "prompt_len": PROMPT, "gen_max": GEN,
         "continuous": {"tokens": cont_tokens, "decode_s": cont_s,
                        "decode_ticks": cont_ticks, "tok_per_s": cont_tps,
-                       "p50_latency_ticks": p50, "p99_latency_ticks": p99},
+                       "p50_latency_ticks": p50, "p99_latency_ticks": p99,
+                       "tokens_wasted": eng.tokens_wasted,
+                       **decomp},
         "static": {"tokens": static_tokens, "decode_s": static_s,
                    "decode_ticks": static_ticks, "tok_per_s": stat_tps},
         "decode_speedup_x": speedup,
@@ -142,6 +152,12 @@ def run() -> list[tuple[str, float, str]]:
         ("fig6/tick_ratio_x", tick_ratio, "static ticks / continuous ticks"),
         ("fig6/p50_latency_ticks", float(p50), ""),
         ("fig6/p99_latency_ticks", float(p99), ""),
+        ("fig6/ttft_p50_ticks", float(decomp["ttft_p50_ticks"]),
+         "time-to-first-token, from spans"),
+        ("fig6/ttft_p99_ticks", float(decomp["ttft_p99_ticks"]), ""),
+        ("fig6/itl_p50_ticks", float(decomp["itl_p50_ticks"]),
+         "inter-token latency, ticks/token"),
+        ("fig6/itl_p99_ticks", float(decomp["itl_p99_ticks"]), ""),
     ]
 
 

@@ -81,6 +81,7 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
     rt.build(IMAGEFILE, tag="bench")
 
     # -- scaling sweep -------------------------------------------------------
+    from repro.orchestrator.obs import decomposition
     from repro.orchestrator.telemetry import latency_summary
     scaling = []
     vocab = None
@@ -98,7 +99,9 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
                         "router_ticks": ticks,
                         "tok_per_tick": tokens / max(ticks, 1),
                         # nearest-rank, same definition as serve.py/fig6
-                        **latency_summary(reqs)})
+                        **latency_summary(reqs),
+                        # TTFT/ITL from the fleet's span logs, not re-derived
+                        **decomposition(router.trace_buffers())})
     tpt = {s["pods"]: s["tok_per_tick"] for s in scaling}
     speedup_2x = tpt[2] / max(tpt[1], 1e-9)
     monotone = all(scaling[i]["tok_per_tick"] <= scaling[i + 1]["tok_per_tick"]
@@ -171,6 +174,12 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         ("fig8/p99_latency_ticks_max_pods", float(
             scaling[-1]["p99_latency_ticks"]),
          f"nearest-rank, {sweep[-1]} pods"),
+        ("fig8/ttft_p99_ticks_max_pods", float(
+            scaling[-1]["ttft_p99_ticks"]),
+         f"time-to-first-token, {sweep[-1]} pods (from spans)"),
+        ("fig8/itl_p50_ticks_max_pods", float(
+            scaling[-1]["itl_p50_ticks"]),
+         f"inter-token latency, {sweep[-1]} pods (from spans)"),
     ]
 
 

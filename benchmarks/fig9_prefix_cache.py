@@ -108,12 +108,17 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
         eng = pod.engines[0]
         eng.pool.check()            # allocator clean after the full trace
         assert all(r.state == "done" for r in reqs), "trace dropped work"
+        from repro.orchestrator.obs import decomposition
         runs[cache] = {
             "peak_concurrent": peak,
             "prefill_positions": eng.prefill_positions,
             "prefix_hits": eng.prefix_hits,
             "prefix_tokens_saved": eng.prefix_tokens_saved,
             "peak_pages_in_use": eng.pool.peak_in_use,
+            # TTFT/ITL from the pod's span log: the cache should shrink
+            # TTFT (shorter prefill + faster admission under pool pressure)
+            # while ITL stays decode-bound
+            **decomposition([pod.trace]),
             "tokens": {r.rid: list(r.tokens) for r in reqs},
         }
 
@@ -161,6 +166,12 @@ def run(smoke: bool = False) -> list[tuple[str, float, str]]:
          "cache-on vs cache-off, same pool"),
         ("fig9/token_parity_on_vs_off", float(parity),
          "bitwise-identical request tokens"),
+        ("fig9/ttft_p99_ticks_off", float(runs[False]["ttft_p99_ticks"]),
+         "time-to-first-token, full reservations"),
+        ("fig9/ttft_p99_ticks_on", float(runs[True]["ttft_p99_ticks"]),
+         "suffix-only reservations admit sooner"),
+        ("fig9/itl_p50_ticks_on", float(runs[True]["itl_p50_ticks"]),
+         "inter-token latency stays decode-bound"),
     ]
 
 

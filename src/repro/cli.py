@@ -66,6 +66,15 @@ def cmd_tag(rt: Runtime, args) -> int:
     return 0
 
 
+def _snap_latency(snap: dict, name: str = "latency_ticks"):
+    """('-', '-') when the snapshot holds no completed samples --
+    nearest_rank's 0-for-empty must never render as a 0-tick latency."""
+    from repro.orchestrator.obs.metrics import snapshot_percentile
+    p50 = snapshot_percentile(snap, name, 50)
+    p99 = snapshot_percentile(snap, name, 99)
+    return (("-", "-") if p50 is None else (p50, p99))
+
+
 def cmd_ps(rt: Runtime, args) -> int:
     for rec in rt.ps():
         print(f"{rec['id'][:24]:26s} {rec['arch']:24s} "
@@ -88,6 +97,11 @@ def cmd_ps(rt: Runtime, args) -> int:
                 # the fleet reads as one unit: one router line; member pods
                 # follow as their own records (marked router=<id>)
                 draining = len(pod.get("draining", []))
+                # per-placement-policy spillover/rejection counters
+                policy = "".join(
+                    f" {pol}[spill={c.get('spillover', 0)}"
+                    f",rej={c.get('rejected', 0)}]"
+                    for pol, c in sorted(pod.get("by_policy", {}).items()))
                 print(f"{pod.get('router', p.stem):26s} "
                       f"policy={pod.get('policy', '?')} "
                       f"pods={len(pod.get('pods', []))} "
@@ -95,7 +109,7 @@ def cmd_ps(rt: Runtime, args) -> int:
                       f"free={pod.get('free_slots', 0)} "
                       f"pending={pod.get('pending', 0)} "
                       f"rejected={pod.get('rejected', 0)} "
-                      f"spilled={pod.get('spilled', 0)} "
+                      f"spilled={pod.get('spilled', 0)}{policy} "
                       f"draining={draining} {phase:8s}")
                 continue
             reps = pod.get("replicas", [])
@@ -109,12 +123,17 @@ def cmd_ps(rt: Runtime, args) -> int:
                       f"/{sum(c['misses'] for c in pcs)}"
                       f" shared={sum(c['shared_pages'] for c in pcs)}"
                       if pcs else "")
+            wasted = sum(r.get("tokens_wasted", 0) for r in reps)
+            # p50/p99 from the registry snapshot riding the state file;
+            # '-' when no request ever completed (0 would read as instant)
+            p50, p99 = _snap_latency(pod.get("metrics", {}))
             print(f"{pod.get('pod', p.stem):26s} "
                   f"image={pod.get('image', '?')} "
                   f"replicas={len(reps)} capacity={pod.get('capacity', 0)} "
                   f"free={pod.get('free_slots', 0)} "
                   f"active={active} prefills={prefills} "
-                  f"rejected={pod.get('rejected', 0)}{prefix} {phase:8s} "
+                  f"rejected={pod.get('rejected', 0)} wasted={wasted} "
+                  f"p50/p99={p50}/{p99}{prefix} {phase:8s} "
                   f"ref={pod.get('ref') or '-'}"
                   + (f" router={router}" if router else ""))
     return 0
@@ -154,7 +173,85 @@ def cmd_serve(rt: Runtime, args) -> int:
         argv += ["--prefix-cache"]
     if args.shared_prefix:
         argv += ["--shared-prefix", str(args.shared_prefix)]
+    if args.trace:
+        argv += ["--trace", args.trace]
     serve_main(argv)
+    return 0
+
+
+def cmd_top(rt: Runtime, args) -> int:
+    """Live fleet dashboard rendered from the metrics snapshots riding the
+    pod/router state files -- nothing is re-derived from raw counters."""
+    import time
+    from repro.orchestrator.obs.metrics import (snapshot_count,
+                                                snapshot_percentile,
+                                                snapshot_total)
+
+    def pct(snap, name, p, scale=1.0):
+        v = snapshot_percentile(snap, name, p)
+        if v is None:
+            return "-"
+        return f"{v * scale:g}"
+
+    def render() -> int:
+        pods_dir = rt.root / "pods"
+        files = sorted(pods_dir.glob("*.json")) if pods_dir.exists() else []
+        print(f"{'NAME':26s} {'PHASE':8s} {'QUEUE':>5s} {'POOL':>9s} "
+              f"{'PREFIX':>7s} {'WASTED':>6s} {'TOKENS':>7s} "
+              f"{'P50/P99':>9s} {'TTFT':>9s} {'ITL':>11s}")
+        shown = 0
+        for p in files:
+            try:
+                pod = json.loads(p.read_text())
+            except (OSError, json.JSONDecodeError):
+                continue
+            if not isinstance(pod, dict) or "metrics" not in pod:
+                continue
+            is_router = pod.get("kind") == "router"
+            name = pod.get("router" if is_router else "pod", p.stem)
+            phase = pod.get("phase", "-")
+            pid = pod.get("pid")
+            if pid is not None and not _pid_alive(pid):
+                phase = "exited"
+            snap = pod["metrics"]
+            queue = snapshot_total(snap, "queue_depth")
+            in_use = snapshot_total(snap, "pool_in_use")
+            pool_cap = sum(r.get("pool", {}).get("pages", 0)
+                           for r in pod.get("replicas", []))
+            pool = f"{in_use}/{pool_cap}" if pool_cap else "-"
+            hits = snapshot_total(snap, "prefix_hits")
+            misses = snapshot_total(snap, "prefix_misses")
+            rate = (f"{hits / (hits + misses):.0%}" if hits + misses else "-")
+            lat = (f"{pct(snap, 'latency_ticks', 50)}"
+                   f"/{pct(snap, 'latency_ticks', 99)}"
+                   if snapshot_count(snap, "latency_ticks") else "-")
+            ttft = (f"{pct(snap, 'ttft_ticks', 50)}"
+                    f"/{pct(snap, 'ttft_ticks', 99)}"
+                    if snapshot_count(snap, "ttft_ticks") else "-")
+            # ITL is stored in milli-ticks; render in ticks/token
+            itl = (f"{pct(snap, 'itl_milliticks', 50, 1e-3)}"
+                   f"/{pct(snap, 'itl_milliticks', 99, 1e-3)}"
+                   if snapshot_count(snap, "itl_milliticks") else "-")
+            print(f"{name:26s} {phase:8s} {queue:>5d} {pool:>9s} "
+                  f"{rate:>7s} {snapshot_total(snap, 'tokens_wasted'):>6d} "
+                  f"{snapshot_total(snap, 'tokens_out'):>7d} "
+                  f"{lat:>9s} {ttft:>9s} {itl:>11s}")
+            shown += 1
+        if not shown:
+            print("(no pod state found -- run `serve` first)")
+        return shown
+
+    if not args.watch:
+        render()
+        return 0
+    try:
+        while True:
+            print(f"\x1b[2J\x1b[Hrepro top  (every {args.watch:g}s, "
+                  f"ctrl-c to exit)")
+            render()
+            time.sleep(args.watch)
+    except KeyboardInterrupt:
+        pass
     return 0
 
 
@@ -222,13 +319,22 @@ def main(argv=None) -> int:
     p.add_argument("--shared-prefix", type=int, default=0,
                    help="prepend an N-token shared system prompt to the "
                         "trace")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="export request-lifecycle spans as Chrome "
+                        "trace-event JSON (open in Perfetto)")
+
+    p = sub.add_parser("top",
+                       help="live serving metrics (queue/pool/latency) "
+                            "from the pod state files")
+    p.add_argument("--watch", type=float, default=0, metavar="SECONDS",
+                   help="refresh every N seconds until interrupted")
 
     args = ap.parse_args(argv)
     rt = Runtime(args.root)
     return {
         "build": cmd_build, "images": cmd_images, "history": cmd_history,
         "tag": cmd_tag, "ps": cmd_ps, "run": cmd_run, "serve": cmd_serve,
-        "inspect": cmd_inspect,
+        "inspect": cmd_inspect, "top": cmd_top,
     }[args.cmd](rt, args)
 
 

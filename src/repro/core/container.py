@@ -105,6 +105,10 @@ class Container:
                         else Path(".stevedore") / "overlays") / self.container_id
         self.compile_cache = compile_cache
         self._metrics_path = self.overlay / "metrics.jsonl"
+        # serve-step compile accounting, bucketed by dispatch class
+        # ("prefill"/"decode"/"other" -> {hits, misses, seconds}); filled by
+        # compile_serve_step, surfaced in SlotEngine.status()/`repro ps`
+        self.serve_compile_stats: dict[str, dict] = {}
 
     # ------------------------------------------------------------------
     def _constrain(self, x, logical):
@@ -542,16 +546,30 @@ class Container:
         image whose serving-relevant layers are unchanged deserializes the
         executable instead of re-tracing (see _serve_cache_digest).
         """
+        from repro.serve.serve_step import dispatch_class
+        acct = self.serve_compile_stats.setdefault(
+            dispatch_class(kind), {"hits": 0, "misses": 0, "seconds": 0.0})
         if self.compile_cache is None:
-            return self.lower_serve_step(kind, **shapes).compile()
+            import time
+            t0 = time.perf_counter()
+            exe = self.lower_serve_step(kind, **shapes).compile()
+            acct["misses"] += 1
+            acct["seconds"] += time.perf_counter() - t0
+            return exe
         sig = ",".join(f"{k}={v}" for k, v in sorted(shapes.items())
                        if v is not None)
         key = self.compile_cache.key(
             image_digest=self._serve_cache_digest(),
             step_kind=f"serve:{kind}[{sig}]",
             mesh=self.mesh, args_tree=None)
-        return self.compile_cache.get_or_build(
+        stats = self.compile_cache.stats
+        hits0, miss0 = stats.hits_l1 + stats.hits_l2, stats.misses
+        exe = self.compile_cache.get_or_build(
             key, lambda: self.lower_serve_step(kind, **shapes))
+        acct["hits"] += (stats.hits_l1 + stats.hits_l2) - hits0
+        acct["misses"] += stats.misses - miss0
+        acct["seconds"] += stats.last_seconds
+        return exe
 
     # -- lowering (the dry-run entry) ------------------------------------------
     def lower_step(self, kind: str | None = None, donate: bool = True):

@@ -114,6 +114,7 @@ def _make_pod(rt: Runtime, image, args, cfg):
 
 def serve_continuous(rt: Runtime, image, args) -> dict:
     from repro.orchestrator import ContinuousScheduler, PodRouter
+    from repro.orchestrator.obs import decomposition, export_chrome
     from repro.orchestrator.telemetry import latency_summary
     cfg = _arch_config(rt, image)
     n_pods = max(1, int(getattr(args, "pods", 1)))
@@ -161,12 +162,23 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
             "misses": sum(e.prefix_misses for e in engines),
             "tokens_saved": sum(e.prefix_tokens_saved for e in engines),
         },
+        "tokens_wasted": sum(e.tokens_wasted for e in engines),
         # nearest-rank percentiles, measured from request ARRIVAL (the
         # trace stagger is offered load, not serving latency)
         **latency_summary(done),
         "request_tokens": {r.rid: list(r.tokens) for r in done},
         "pod": pods[0].status() if n_pods == 1 else None,
     }
+    # TTFT / inter-token-latency decomposition derived from the span logs
+    # (not re-measured): the same numbers a trace viewer would show
+    buffers = (driver.trace_buffers() if n_pods > 1
+               else [pods[0].trace])
+    out["decomposition"] = decomposition(buffers)
+    trace_path = getattr(args, "trace", None)
+    if trace_path:
+        trace = export_chrome(buffers, trace_path)
+        print(f"[serve] trace: {len(trace['traceEvents'])} events -> "
+              f"{trace_path} (open in Perfetto / chrome://tracing)")
     if n_pods > 1:
         out["fleet"] = driver.status()
         print(f"[serve] fleet={driver.router_id} policy={driver.policy} "
@@ -176,10 +188,20 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
         print(f"[serve] pod={pods[0].pod_id} "
               f"image={pods[0].image.short_digest} "
               f"replicas={args.replicas} slots={args.slots}")
+    # a run with no completions has no latency: render '-', never a fake 0
+    if out["latency_count"]:
+        p50, p99 = out["p50_latency_ticks"], out["p99_latency_ticks"]
+    else:
+        p50 = p99 = "-"
     print(f"[serve] {len(done)} requests, {toks} tokens in {wall:.2f}s "
           f"(decode {out['decode_tok_per_s']:.0f} tok/s over {ticks} ticks; "
-          f"p50 {out['p50_latency_ticks']} / p99 {out['p99_latency_ticks']} "
-          f"ticks)")
+          f"p50 {p50} / p99 {p99} ticks)")
+    d = out["decomposition"]
+    if d["latency_count"]:
+        print(f"[serve] ttft p50 {d['ttft_p50_ticks']} / "
+              f"p99 {d['ttft_p99_ticks']} ticks; "
+              f"itl p50 {d['itl_p50_ticks']:.2f} / "
+              f"p99 {d['itl_p99_ticks']:.2f} ticks/tok")
     pc = out["prefix_cache"]
     if pc["enabled"]:
         print(f"[serve] prefix cache: {pc['hits']} hits / {pc['misses']} "
@@ -304,6 +326,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend one fixed N-token system prompt to every "
                          "request (the shared-prefix trace)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the run's request-lifecycle spans as "
+                         "Chrome trace-event JSON (open in Perfetto)")
     ap.add_argument("--root", default=".stevedore")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

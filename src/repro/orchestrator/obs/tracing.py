@@ -1,0 +1,211 @@
+"""Request lifecycle tracing: typed span events in a bounded ring buffer,
+with a Chrome trace-event exporter.
+
+Every ``GenRequest`` accrues point events as it moves through the stack::
+
+    submit -> [route] -> queue -> admit|reject -> prefill
+           -> decode_chunk* -> complete
+
+recorded into the owning pod's ``TraceBuffer`` (the router keeps its own
+buffer for placement events and fleet-level rejections). Timestamps are
+scheduler *ticks* -- the deterministic clock the whole orchestrator runs
+on -- so the same trace replayed twice produces the byte-identical span
+log, and aggregate metrics recomputed from it bitwise-match the live
+registry (see ``obs.report.recompute_registry``).
+
+``export_chrome`` pairs the point events into Chrome trace-event JSON
+(``ph: "X"`` complete events on a per-request timeline), so a serve run
+recorded with ``serve --trace out.json`` opens directly in Perfetto /
+``chrome://tracing``: one process row per pod, one thread row per
+request, with queue/prefill/decode spans carrying pod/replica/slot/
+page-count/prefix-hit attributes in ``args``.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import deque
+from dataclasses import dataclass
+from pathlib import Path
+
+SPAN_KINDS = ("submit", "route", "queue", "admit", "reject", "prefill",
+              "decode_chunk", "complete")
+
+# one tick rendered as 1000 "microseconds" so sub-tick spans (prefill) stay
+# visible at default Perfetto zoom
+TICK_US = 1000
+
+
+@dataclass(frozen=True)
+class SpanEvent:
+    """One typed point event in a request's lifecycle. ``attrs`` is a
+    sorted (key, value) tuple -- hashable and deterministically ordered,
+    so span logs compare byte-for-byte across runs."""
+    rid: int
+    name: str
+    tick: int
+    attrs: tuple = ()
+
+    def attr(self, key: str, default=None):
+        for k, v in self.attrs:
+            if k == key:
+                return v
+        return default
+
+
+class TraceBuffer:
+    """Bounded ring buffer of span events (one per pod, one per router).
+
+    Fixed capacity: a long-lived serving fleet records forever and the
+    oldest spans fall off; ``dropped`` counts them so exporters and the
+    recompute check know whether the log is complete."""
+
+    def __init__(self, capacity: int = 1 << 16, name: str = "trace"):
+        if capacity < 1:
+            raise ValueError("TraceBuffer needs capacity >= 1")
+        self.capacity = int(capacity)
+        self.name = name
+        self._events: deque[SpanEvent] = deque(maxlen=self.capacity)
+        self.recorded = 0
+
+    @property
+    def dropped(self) -> int:
+        return self.recorded - len(self._events)
+
+    def record(self, rid: int, name: str, tick: int, **attrs) -> None:
+        if name not in SPAN_KINDS:
+            raise ValueError(f"unknown span kind {name!r}; one of {SPAN_KINDS}")
+        self._events.append(SpanEvent(
+            rid=int(rid), name=name, tick=int(tick),
+            attrs=tuple(sorted(attrs.items()))))
+        self.recorded += 1
+
+    def events(self) -> list[SpanEvent]:
+        return list(self._events)
+
+    def by_request(self) -> dict[int, list[SpanEvent]]:
+        """Events grouped per rid, in record order (which is tick order:
+        the scheduler records monotonically)."""
+        out: dict[int, list[SpanEvent]] = {}
+        for e in self._events:
+            out.setdefault(e.rid, []).append(e)
+        return out
+
+    def clear(self) -> None:
+        self._events.clear()
+        self.recorded = 0
+
+    def status(self) -> dict:
+        return {"capacity": self.capacity, "buffered": len(self._events),
+                "recorded": self.recorded, "dropped": self.dropped}
+
+
+def _x(name, ts, dur, pid, tid, rid, **args):
+    return {"name": name, "ph": "X", "ts": ts * TICK_US,
+            "dur": max(0, dur) * TICK_US, "pid": pid, "tid": tid,
+            "args": {"rid": rid, **args}}
+
+
+def _i(name, ts, pid, tid, rid, **args):
+    return {"name": name, "ph": "i", "s": "t", "ts": ts * TICK_US,
+            "pid": pid, "tid": tid, "args": {"rid": rid, **args}}
+
+
+def export_chrome(buffers, path: str | Path | None = None) -> dict:
+    """Render span buffers as a Chrome trace-event JSON object (and write
+    it to ``path`` when given). One pid per buffer (pod / router), one tid
+    per request; point events are paired into ``X`` complete spans:
+
+    * ``queue``   : submit (or arrival, whichever is later) -> admit/reject
+    * ``prefill`` : the admission tick (1 tick wide), with positions/pages/
+      prefix-hit attrs
+    * ``decode``  : one span per decode chunk, ``chunk`` ticks wide
+    * ``generate``: admit -> complete envelope (tokens attr)
+    * ``route`` / ``reject`` / ``complete``: instants
+    """
+    events = []
+    for pid, buf in enumerate(buffers):
+        events.append({"name": "process_name", "ph": "M", "ts": 0, "pid": pid,
+                       "args": {"name": getattr(buf, "name", f"pod{pid}")}})
+        for rid, evs in sorted(buf.by_request().items()):
+            tid = rid
+            submit = admit = None
+            baseline = None
+            for e in evs:
+                if e.name == "submit":
+                    submit = e
+                    baseline = max(e.tick, int(e.attr("arrival", e.tick)))
+                elif e.name == "route":
+                    events.append(_i("route", e.tick, pid, tid, rid,
+                                     **dict(e.attrs)))
+                elif e.name == "admit":
+                    admit = e
+                    if baseline is not None:
+                        events.append(_x("queue", baseline,
+                                         e.tick - baseline, pid, tid, rid))
+                elif e.name == "prefill":
+                    events.append(_x("prefill", e.tick, 1, pid, tid, rid,
+                                     **dict(e.attrs)))
+                elif e.name == "decode_chunk":
+                    events.append(_x("decode", e.tick,
+                                     int(e.attr("chunk", 1)), pid, tid, rid,
+                                     slot=e.attr("slot")))
+                elif e.name == "reject":
+                    if baseline is not None:
+                        events.append(_x("queue", baseline,
+                                         e.tick - baseline, pid, tid, rid))
+                    events.append(_i("reject", e.tick, pid, tid, rid,
+                                     **dict(e.attrs)))
+                elif e.name == "complete":
+                    if admit is not None:
+                        events.append(_x("generate", admit.tick,
+                                         e.tick - admit.tick, pid, tid, rid,
+                                         tokens=e.attr("tokens")))
+                    events.append(_i("complete", e.tick, pid, tid, rid,
+                                     **dict(e.attrs)))
+    # deterministic, per-request-monotone order: spans are paired out of
+    # record order (the generate envelope starts at admit but is only
+    # known at complete), so sort non-metadata events by (pid, rid, ts)
+    meta = [e for e in events if e["ph"] == "M"]
+    rest = sorted((e for e in events if e["ph"] != "M"),
+                  key=lambda e: (e["pid"], e["args"]["rid"], e["ts"]))
+    trace = {"traceEvents": meta + rest, "displayTimeUnit": "ms",
+             "otherData": {"clock": "scheduler ticks",
+                           "tick_us": TICK_US}}
+    if path is not None:
+        Path(path).write_text(json.dumps(trace, indent=1))
+    return trace
+
+
+def validate_chrome_trace(trace: dict | str | Path) -> dict:
+    """Minimal schema check for an exported trace (the CI gate): a
+    non-empty ``traceEvents`` list, every event carrying ``ph``/``ts``/
+    ``pid``/``name``, non-negative durations, and timestamps monotone
+    per request (grouped by ``(pid, args.rid)``). Raises ``ValueError``
+    with the first violation; returns summary stats on success."""
+    if not isinstance(trace, dict):
+        trace = json.loads(Path(trace).read_text())
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        raise ValueError("trace has no traceEvents")
+    last_ts: dict[tuple, float] = {}
+    requests = set()
+    for i, e in enumerate(events):
+        for key in ("name", "ph", "ts", "pid"):
+            if key not in e:
+                raise ValueError(f"event {i} ({e}) is missing {key!r}")
+        if e["ph"] == "M":
+            continue
+        if e["ph"] == "X" and e.get("dur", 0) < 0:
+            raise ValueError(f"event {i} has negative duration")
+        rid = (e.get("args") or {}).get("rid")
+        if rid is None:
+            raise ValueError(f"event {i} carries no args.rid")
+        key = (e["pid"], rid)
+        requests.add(key)
+        if e["ts"] < last_ts.get(key, 0):
+            raise ValueError(
+                f"event {i} ({e['name']}) goes backwards for request {key}: "
+                f"ts {e['ts']} < {last_ts[key]}")
+        last_ts[key] = e["ts"]
+    return {"events": len(events), "requests": len(requests)}

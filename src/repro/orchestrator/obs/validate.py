@@ -1,0 +1,35 @@
+"""Trace validation CLI: ``python -m repro.orchestrator.obs.validate t.json``.
+
+The CI orchestrator job runs a ``serve --trace`` smoke and gates on this
+exiting 0 -- the checks are the minimal Chrome trace-event schema
+(``validate_chrome_trace``): every event has ``ph``/``ts``/``pid``/
+``name``, durations are non-negative, timestamps monotone per request.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.orchestrator.obs.tracing import validate_chrome_trace
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.orchestrator.obs.validate",
+        description="validate a Chrome trace-event JSON exported by "
+                    "`serve --trace`")
+    ap.add_argument("trace", help="path to the trace JSON file")
+    args = ap.parse_args(argv)
+    try:
+        stats = validate_chrome_trace(args.trace)
+    except (OSError, ValueError) as e:
+        print(f"INVALID {args.trace}: {e}", file=sys.stderr)
+        return 1
+    print(f"OK {args.trace}: {stats['events']} events, "
+          f"{stats['requests']} requests")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -56,6 +56,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.orchestrator.obs.metrics import MetricsRegistry
+
 GARBAGE_PAGE = 0
 
 
@@ -73,7 +75,8 @@ class PrefixEntry:
 
 class PagePool:
     def __init__(self, n_pages: int, page_size: int, n_slots: int,
-                 max_pages: int):
+                 max_pages: int, *, metrics: MetricsRegistry | None = None,
+                 replica: str | None = None):
         if n_pages < 2:
             raise ValueError("PagePool needs >= 2 pages (page 0 is garbage)")
         self.n_pages = int(n_pages)
@@ -93,13 +96,44 @@ class PagePool:
         self.refcount = np.zeros(self.n_pages, np.int64)
         self.prefix: dict[str, PrefixEntry] = {}
         self._clock = 0
-        # accounting (status + the fig7/fig9 benchmarks)
-        self.pages_allocated = 0
-        self.pages_freed = 0
-        self.peak_in_use = 0
-        self.prefix_hits = 0
-        self.evictions = 0
-        self.cow_copies = 0
+        # accounting (status + the fig7/fig9 benchmarks) lives in the shared
+        # registry (the pod's when embedded, a private one standalone); the
+        # old attribute names survive below as read-only property shims.
+        # "pool_"-prefixed names keep pool prefix-hits/evictions distinct
+        # from the engine-level counters of the same concept.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        labels = {"replica": replica} if replica is not None else {}
+        self._c_alloc = self.metrics.counter("pages_allocated", **labels)
+        self._c_freed = self.metrics.counter("pages_freed", **labels)
+        self._c_evict = self.metrics.counter("pool_evictions", **labels)
+        self._c_cow = self.metrics.counter("cow_copies", **labels)
+        self._c_phits = self.metrics.counter("pool_prefix_hits", **labels)
+        self._g_in_use = self.metrics.gauge("pool_in_use", **labels)
+
+    # registry-backed shims for the pre-registry attribute names
+    @property
+    def pages_allocated(self) -> int:
+        return self._c_alloc.value
+
+    @property
+    def pages_freed(self) -> int:
+        return self._c_freed.value
+
+    @property
+    def evictions(self) -> int:
+        return self._c_evict.value
+
+    @property
+    def cow_copies(self) -> int:
+        return self._c_cow.value
+
+    @property
+    def prefix_hits(self) -> int:
+        return self._c_phits.value
+
+    @property
+    def peak_in_use(self) -> int:
+        return self._g_in_use.high
 
     # -- capacity -----------------------------------------------------------
     @property
@@ -176,8 +210,9 @@ class PagePool:
         assert self._evictable(entry), "evicting a prefix with live refs"
         del self.prefix[entry.digest]
         self.free.extend(entry.pages)
-        self.pages_freed += len(entry.pages)
-        self.evictions += 1
+        self._c_freed.inc(len(entry.pages))
+        self._c_evict.inc()
+        self._g_in_use.set(self.in_use)
 
     def alloc_upto(self, slot: int, hi: int) -> None:
         """Ensure pages cover logical positions [0, hi] for ``slot``.
@@ -196,8 +231,8 @@ class PagePool:
             page = self._take_page()
             self.owned[slot].append(page)
             self.table[slot, j] = page
-            self.pages_allocated += 1
-        self.peak_in_use = max(self.peak_in_use, self.in_use)
+            self._c_alloc.inc()
+        self._g_in_use.set(self.in_use)
 
     def release(self, slot: int) -> None:
         """Full reclaim of PRIVATE state: owned pages and the remaining
@@ -206,13 +241,14 @@ class PagePool:
         freeing them here would let a reallocation clobber a live prefix."""
         pages = self.owned[slot]
         self.free.extend(pages)
-        self.pages_freed += len(pages)
+        self._c_freed.inc(len(pages))
         self.owned[slot] = []
         for p in self.shared[slot]:
             self.refcount[p] -= 1
         self.shared[slot] = []
         self.reserved[slot] = 0
         self.table[slot, :] = GARBAGE_PAGE
+        self._g_in_use.set(self.in_use)
 
     # -- prefix sharing -----------------------------------------------------
     def lookup(self, digest: str, tokens: np.ndarray,
@@ -259,8 +295,8 @@ class PagePool:
         self._clock += 1
         entry.last_used = self._clock
         entry.hits += 1
-        self.prefix_hits += 1
-        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self._c_phits.inc()
+        self._g_in_use.set(self.in_use)
 
     def cache_prefix(self, digest: str, tokens: np.ndarray, slot: int,
                      n: int) -> bool:
@@ -302,9 +338,9 @@ class PagePool:
         self.refcount[old] -= 1
         self.owned[slot].insert(0, new)
         self.table[slot, row] = new
-        self.pages_allocated += 1
-        self.cow_copies += 1
-        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self._c_alloc.inc()
+        self._c_cow.inc()
+        self._g_in_use.set(self.in_use)
         return old, new
 
     def drop_prefixes(self) -> int:

@@ -20,6 +20,8 @@ import uuid
 from pathlib import Path
 
 from repro.core.image import EnvImage
+from repro.orchestrator.obs.metrics import MetricsRegistry
+from repro.orchestrator.obs.tracing import TraceBuffer
 from repro.orchestrator.scheduler import SlotEngine
 
 
@@ -52,6 +54,11 @@ class Pod:
         # pool keeps a digest-keyed index of shared prompt-prefix pages
         self.prefix_cache = bool(prefix_cache)
         self.pod_id = f"pod-{uuid.uuid4().hex[:8]}"
+        # one metrics registry + one span ring buffer per pod, shared by
+        # every replica engine (labels keep the per-replica breakdown);
+        # snapshots ride the state file so `ps`/`top` read live numbers
+        self.metrics = MetricsRegistry()
+        self.trace = TraceBuffer(name=self.pod_id)
         # pod-lifetime rejection counter, incremented by whichever scheduler
         # fronts this pod (a burst of rejections is a served-badly signal
         # `repro ps` must show even when no slot occupancy changed)
@@ -82,7 +89,8 @@ class Pod:
                           decode_chunk=self.decode_chunk,
                           paged=self.paged, page_size=self.page_size,
                           n_pages=self.n_pages,
-                          prefix_cache=self.prefix_cache)
+                          prefix_cache=self.prefix_cache,
+                          metrics=self.metrics, trace=self.trace)
 
     def drop_params(self, image_digest: str) -> None:
         """Release a retired generation's shared params (deployer calls
@@ -118,6 +126,8 @@ class Pod:
                       else "idle"),
             "pid": os.getpid(),     # lets `ps` tell live fleets from dead
             "replicas": [e.status() for e in self.engines],
+            "metrics": self.metrics.snapshot(),
+            "trace": self.trace.status(),
         }
 
     def write_state(self, final: bool = False) -> Path:

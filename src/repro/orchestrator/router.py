@@ -52,6 +52,8 @@ import uuid
 from pathlib import Path
 from typing import Iterable
 
+from repro.orchestrator.obs.metrics import MetricsRegistry, merge_snapshots
+from repro.orchestrator.obs.tracing import TraceBuffer
 from repro.orchestrator.pod import Pod
 from repro.orchestrator.request_queue import GenRequest
 from repro.orchestrator.scheduler import ContinuousScheduler
@@ -99,8 +101,17 @@ class PodRouter:
         self._state_tick = -self.STATE_EVERY
         self.completed: list[GenRequest] = []
         self.rejected: list[GenRequest] = []    # router-level (no pod fits)
-        self.routed = 0
-        self.spilled = 0
+        # router-tier observability: placement counters labelled by policy
+        # (status renders them as "by_policy"), plus a span buffer for
+        # route/reject events. ``requests_rejected`` mirrors the pod-level
+        # counter name so the fleet rollup and the span-log recompute agree
+        # on one total.
+        self.metrics = MetricsRegistry()
+        self.trace = TraceBuffer(name=self.router_id)
+        self._c_routed = self.metrics.counter("routed", policy=policy)
+        self._c_spilled = self.metrics.counter("spillover", policy=policy)
+        self._c_rejected = self.metrics.counter("rejected", policy=policy)
+        self._c_req_rejected = self.metrics.counter("requests_rejected")
         # incremental outstanding-work ledger (tokens committed, not yet
         # finished) so shortest-queue placement is O(P log P) per request
         # instead of rescanning every queue and slot bank
@@ -110,6 +121,20 @@ class PodRouter:
             p.router = self.router_id
             p.write_state()
         self.write_state()
+
+    # registry-backed shims for the pre-registry attribute names
+    @property
+    def routed(self) -> int:
+        return self._c_routed.value
+
+    @property
+    def spilled(self) -> int:
+        return self._c_spilled.value
+
+    def trace_buffers(self) -> list[TraceBuffer]:
+        """Every span buffer in the fleet (router first, then pods) --
+        what ``export_chrome`` and the report decomposition consume."""
+        return [self.trace] + [p.trace for p in self.pods]
 
     # -- placement -----------------------------------------------------------
     def is_draining(self, pod: Pod) -> bool:
@@ -185,11 +210,21 @@ class PodRouter:
                              else "router has no pods")
                 req.done_tick = self.tick
                 self.rejected.append(req)
+                self._c_rejected.inc()
+                self._c_req_rejected.inc()
+                self.trace.record(req.rid, "reject", self.tick,
+                                  reason="infeasible", policy=self.policy)
                 continue
             req.spilled = chosen is not order[0]
-            self.spilled += int(req.spilled)
+            if req.spilled:
+                self._c_spilled.inc()
             req.pod = chosen.pod_id
-            self.routed += 1
+            self._c_routed.inc()
+            # the route span lands in the CHOSEN pod's buffer so a request's
+            # whole lifecycle reads off one timeline in the trace viewer
+            chosen.trace.record(req.rid, "route", self.tick,
+                                pod=chosen.pod_id, policy=self.policy,
+                                spilled=req.spilled)
             self._outstanding[chosen.pod_id] += req.max_new_tokens
             self._sched[chosen.pod_id].submit(req)
         if len(self.rejected) != rejected_before:
@@ -299,6 +334,15 @@ class PodRouter:
             "spilled": self.spilled,
             "completed": len(self.completed),
             "rejected": self.rejected_total,
+            "by_policy": {self.policy: {
+                "routed": self._c_routed.value,
+                "spillover": self._c_spilled.value,
+                "rejected": self._c_rejected.value,
+            }},
+            "metrics": merge_snapshots(
+                [self.metrics.snapshot()]
+                + [p.metrics.snapshot() for p in self.pods]),
+            "trace": self.trace.status(),
             "pid": os.getpid(),
             "members": [{
                 "pod": p.pod_id,

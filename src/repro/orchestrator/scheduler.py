@@ -24,6 +24,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.orchestrator.obs.metrics import MetricsRegistry
+from repro.orchestrator.obs.report import (ITL_HIST, TICK_HIST,
+                                           observe_completion)
+from repro.orchestrator.obs.tracing import TraceBuffer
 from repro.orchestrator.page_pool import PagePool
 from repro.orchestrator.request_queue import GenRequest, RequestQueue
 
@@ -62,7 +66,9 @@ class SlotEngine:
                  eos_id: int | None = None, name: str | None = None,
                  decode_chunk: int = 4, paged: bool = False,
                  page_size: int = 16, n_pages: int | None = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 metrics: MetricsRegistry | None = None,
+                 trace: TraceBuffer | None = None):
         self.container = container
         self.params = params
         self.n_slots = int(n_slots)
@@ -93,6 +99,12 @@ class SlotEngine:
             kinds & {"ssm", "rec", "local"}
             or (cfg.window and cfg.attn_kind == "local"))
 
+        # observability: the owning Pod shares its registry + span buffer
+        # across replicas; a standalone engine (unit test, single-replica
+        # benchmark) gets private ones
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.trace = trace if trace is not None else TraceBuffer(name=self.name)
+
         if self.paged:
             if self.exact_prefill:
                 raise NotImplementedError(
@@ -107,7 +119,8 @@ class SlotEngine:
             self.n_pages = int(n_pages) if n_pages else (
                 self.n_slots * self.max_pages + 1)
             self.pool = PagePool(self.n_pages, self.page_size,
-                                 self.n_slots, self.max_pages)
+                                 self.n_slots, self.max_pages,
+                                 metrics=self.metrics, replica=self.name)
             shapes = dict(batch=self.n_slots, n_pages=self.n_pages,
                           page_size=self.page_size, max_pages=self.max_pages)
             one_kind, chunk_kind = "decode_slots_paged", "decode_chunk_paged"
@@ -141,17 +154,66 @@ class SlotEngine:
         self.draining = False
         self.stopped = False
 
-        # accounting (for ps/status + the fig6/fig9 benchmarks)
-        self.slots_allocated = 0
-        self.slots_freed = 0
-        self.decode_ticks = 0
-        self.tokens_generated = 0
+        # accounting (for ps/status + the fig6/fig9 benchmarks): tick-clocked
+        # counts live in the shared registry, labelled per replica; the old
+        # attribute names survive below as read-only property shims. Wall
+        # timings (prefill_s/decode_s) stay plain attributes ON PURPOSE --
+        # the registry must snapshot bitwise-identically for identical
+        # request traces, so wall-clock state never enters it.
+        lab = dict(replica=self.name)
+        self._c_slots_alloc = self.metrics.counter("slots_allocated", **lab)
+        self._c_slots_freed = self.metrics.counter("slots_freed", **lab)
+        self._c_decode_ticks = self.metrics.counter("decode_ticks", **lab)
+        self._c_tokens = self.metrics.counter("tokens_generated", **lab)
+        self._c_positions = self.metrics.counter("prefill_positions", **lab)
+        self._c_phits = self.metrics.counter("prefix_hits", **lab)
+        self._c_pmiss = self.metrics.counter("prefix_misses", **lab)
+        self._c_psaved = self.metrics.counter("prefix_tokens_saved", **lab)
+        # decode-chunk overshoot discards (bounded, counted waste): the
+        # visible cost signal for decode_chunk tuning
+        self._c_wasted = self.metrics.counter("tokens_wasted", **lab)
+        self._c_prefill_disp = self.metrics.counter("prefill_dispatches",
+                                                    **lab)
+        self._c_decode_disp = self.metrics.counter("decode_dispatches", **lab)
         self.prefill_s = 0.0
         self.decode_s = 0.0
-        self.prefill_positions = 0      # real positions actually prefilled
-        self.prefix_hits = 0
-        self.prefix_misses = 0          # cacheable requests that found no entry
-        self.prefix_tokens_saved = 0    # prefill positions skipped via sharing
+
+    # registry-backed shims for the pre-registry attribute names
+    @property
+    def slots_allocated(self) -> int:
+        return self._c_slots_alloc.value
+
+    @property
+    def slots_freed(self) -> int:
+        return self._c_slots_freed.value
+
+    @property
+    def decode_ticks(self) -> int:
+        return self._c_decode_ticks.value
+
+    @property
+    def tokens_generated(self) -> int:
+        return self._c_tokens.value
+
+    @property
+    def prefill_positions(self) -> int:
+        return self._c_positions.value
+
+    @property
+    def prefix_hits(self) -> int:
+        return self._c_phits.value
+
+    @property
+    def prefix_misses(self) -> int:
+        return self._c_pmiss.value
+
+    @property
+    def prefix_tokens_saved(self) -> int:
+        return self._c_psaved.value
+
+    @property
+    def tokens_wasted(self) -> int:
+        return self._c_wasted.value
 
     # -- admission ----------------------------------------------------------
     def has_free(self) -> bool:
@@ -281,9 +343,11 @@ class SlotEngine:
         if not self.fits(req):
             raise ValueError(f"request {req.rid}: {self.reject_reason(req)}")
         slot = self.free.pop(0)
-        self.slots_allocated += 1
+        self._c_slots_alloc.inc()
         req.slot, req.replica, req.state = slot, self.name, "running"
         req.admit_tick = tick
+        self.trace.record(req.rid, "admit", tick, replica=self.name,
+                          slot=slot)
 
         P = req.prompt_len
         hit = self.prefix_hit(req, touch=True) if self.paged else None
@@ -322,10 +386,15 @@ class SlotEngine:
             row = jnp.asarray(self.pool.table[slot, kp:kp + np_])
             self.cache = _insert_pages_jit(self.cache, small, row)
             start_pos = P
-            self.prefix_hits += 1
-            self.prefix_tokens_saved += L
-            self.prefill_positions += S
+            self._c_phits.inc()
+            self._c_psaved.inc(L)
+            self._c_positions.inc(S)
+            self._c_prefill_disp.inc()
             self.prefill_s += time.perf_counter() - t0
+            self.trace.record(req.rid, "prefill", tick, replica=self.name,
+                              slot=slot, positions=S, bucket=bucket,
+                              pages=self.pages_needed(req) - kp,
+                              prefix_hit=True, tokens_saved=L)
         else:
             bucket = self.bucket(P)
             prefill = self._prefills.get(bucket)
@@ -366,20 +435,27 @@ class SlotEngine:
                 self.cache = self._insert(self.cache, small, jnp.int32(slot))
             first = int(jax.block_until_ready(first)[0])
             self.prefill_s += time.perf_counter() - t0
-            self.prefill_positions += req.frontend_len + P
+            self._c_positions.inc(req.frontend_len + P)
+            self._c_prefill_disp.inc()
+            self.trace.record(req.rid, "prefill", tick, replica=self.name,
+                              slot=slot, positions=req.frontend_len + P,
+                              bucket=bucket,
+                              pages=(self.pages_needed(req) if self.paged
+                                     else 0),
+                              prefix_hit=False)
             blk = self._prefix_block(req)
             if blk is not None:
                 # MISS: promote the freshly-written, fully-covered leading
                 # prompt pages into the prefix index so later requests with
                 # the same block share them (first writer wins)
-                self.prefix_misses += 1
+                self._c_pmiss.inc()
                 digest, block, _ = blk
                 kc = req.prefix_len // self.page_size
                 if kc >= 1:
                     self.pool.cache_prefix(digest, block, slot, kc)
 
         req.tokens.append(first)
-        self.tokens_generated += 1
+        self._c_tokens.inc()
         self.pos[slot] = start_pos      # next decode writes here
         self.cur_tok[slot] = first
         self.active[slot] = req
@@ -414,7 +490,8 @@ class SlotEngine:
                 jnp.asarray(self.cur_tok[:, None]), jnp.asarray(self.pos))
         toks = np.asarray(jax.block_until_ready(toks))   # (n_slots, chunk)
         self.decode_s += time.perf_counter() - t0
-        self.decode_ticks += self.chunk
+        self._c_decode_ticks.inc(self.chunk)
+        self._c_decode_disp.inc()
 
         finished = []
         # advance ACTIVE rows only: free slots stay parked at 0, so an
@@ -426,11 +503,16 @@ class SlotEngine:
             self.pos[slot] += self.chunk
         for slot, req in list(self.active.items()):
             self.cur_tok[slot] = int(toks[slot, -1])
+            self.trace.record(req.rid, "decode_chunk", tick,
+                              replica=self.name, slot=slot, chunk=self.chunk)
             for k in range(self.chunk):
                 tok = int(toks[slot, k])
                 req.tokens.append(tok)
-                self.tokens_generated += 1
+                self._c_tokens.inc()
                 if self._finished(req, tok):
+                    # the rest of the chunk decoded past the finish: those
+                    # tokens are discarded -- count the waste
+                    self._c_wasted.inc(self.chunk - 1 - k)
                     self._complete(req, tick)
                     finished.append(req)
                     break
@@ -448,9 +530,12 @@ class SlotEngine:
 
     def _complete(self, req: GenRequest, tick: int) -> None:
         req.state, req.done_tick = "done", tick
+        self.trace.record(req.rid, "complete", tick, replica=self.name,
+                          slot=req.slot, tokens=len(req.tokens),
+                          reason=req.finish_reason)
         self.active.pop(req.slot)
         self.free.append(req.slot)
-        self.slots_freed += 1
+        self._c_slots_freed.inc()
         # park the freed row at position 0: free slots are still dispatched
         # every chunk (their output is discarded), so an unbounded position
         # would drift past the cache span while the slot sits idle
@@ -481,11 +566,15 @@ class SlotEngine:
             "stopped": self.stopped,
             "decode_ticks": self.decode_ticks,
             "tokens_generated": self.tokens_generated,
+            "tokens_wasted": self.tokens_wasted,
             # one compiled prefill per distinct bucket -- bounded for
             # pow2-bucketed archs, per distinct prompt length in
             # exact-prefill mode (watch this in `ps` for unbounded growth)
             "prefill_execs": len(self._prefills),
         }
+        compile_stats = getattr(self.container, "serve_compile_stats", None)
+        if compile_stats:
+            out["compile"] = dict(compile_stats)
         if self.paged:
             out["pool"] = self.pool.status()
             if self.prefix_cache:
@@ -513,12 +602,26 @@ class ContinuousScheduler:
         self.completed: list[GenRequest] = []
         self.rejected: list[GenRequest] = []
         self.admission_order: list[int] = []
+        # pod-level completion metrics, registered eagerly so an idle pod
+        # still snapshots the full (empty) shape; geometry shared with
+        # obs.report so the span-log recompute compares field-for-field
+        self.metrics = getattr(pod, "metrics", None) or MetricsRegistry()
+        self.trace = getattr(pod, "trace", None) or TraceBuffer()
+        self._c_completed = self.metrics.counter("requests_completed")
+        self._c_rejected = self.metrics.counter("requests_rejected")
+        self._c_tokens_out = self.metrics.counter("tokens_out")
+        self._g_queue = self.metrics.gauge("queue_depth")
+        self.metrics.histogram("latency_ticks", **TICK_HIST)
+        self.metrics.histogram("ttft_ticks", **TICK_HIST)
+        self.metrics.histogram("itl_milliticks", **ITL_HIST)
 
     def submit(self, reqs: Iterable[GenRequest] | GenRequest) -> None:
         if isinstance(reqs, GenRequest):
             reqs = [reqs]
         for r in reqs:
             self.queue.submit(r, self.tick)
+            self.trace.record(r.rid, "submit", self.tick, arrival=r.arrival)
+        self._g_queue.set(self.queue.pending)
 
     def reject(self, req: GenRequest) -> None:
         """Terminal rejection: record the per-engine reasons and count it
@@ -529,6 +632,8 @@ class ContinuousScheduler:
         req.done_tick = self.tick
         self.rejected.append(req)
         self.pod.rejected += 1
+        self._c_rejected.inc()
+        self.trace.record(req.rid, "reject", self.tick, reason="oversized")
 
     # -- one global tick ------------------------------------------------------
     def step(self) -> list[GenRequest]:
@@ -573,6 +678,9 @@ class ContinuousScheduler:
         for eng in self.pod.engines:
             done.extend(eng.tick(self.tick))
         self.completed.extend(done)
+        for req in done:
+            self._observe(req)
+        self._g_queue.set(self.queue.pending)
         self.tick += 1
         # keep `repro ps` honest without putting file I/O in every tick:
         # refresh on occupancy OR rejection changes, at most once per
@@ -583,6 +691,15 @@ class ContinuousScheduler:
             self.pod.write_state()
             self._state_tick = self.tick
         return done
+
+    def _observe(self, req: GenRequest) -> None:
+        """Feed one completion into the pod registry. Shares the formulas
+        with ``obs.report.observe_completion`` so metrics recomputed from
+        the span log bitwise-match this registry's snapshot."""
+        observe_completion(
+            self.metrics, arrival=req.arrival, submit_tick=req.submit_tick,
+            admit_tick=req.admit_tick, done_tick=req.done_tick,
+            n_tokens=len(req.tokens))
 
     @property
     def busy(self) -> bool:

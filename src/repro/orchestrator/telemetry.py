@@ -41,8 +41,12 @@ def request_latencies(done: Iterable) -> list[int]:
 
 
 def latency_summary(done: Iterable) -> dict:
+    """p50/p99 plus the sample count. ``nearest_rank`` returns 0 for empty
+    input, indistinguishable from a true 0-tick latency -- renderers check
+    ``latency_count`` and print ``-`` when it is 0."""
     lat = request_latencies(done)
     return {
+        "latency_count": len(lat),
         "p50_latency_ticks": nearest_rank(lat, 50),
         "p99_latency_ticks": nearest_rank(lat, 99),
     }

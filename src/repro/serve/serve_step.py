@@ -43,6 +43,24 @@ from repro.dist.sharding import ShardingRules
 from repro.models.transformer import Model
 
 
+# dispatch classes for compile accounting (Container.compile_serve_step
+# buckets cache hits/misses per class; SlotEngine.status surfaces them):
+# prefill executables are per-bucket and dominate compile count, decode
+# executables are per-geometry and dominate steady-state dispatch
+PREFILL_STEPS = frozenset({"prefill", "prefill_slot", "prefill_slot_paged"})
+DECODE_STEPS = frozenset({"decode", "decode_slots", "decode_chunk",
+                          "decode_slots_paged", "decode_chunk_paged"})
+
+
+def dispatch_class(kind: str) -> str:
+    """\"prefill\" | \"decode\" | \"other\" for a serve-step kind."""
+    if kind in PREFILL_STEPS:
+        return "prefill"
+    if kind in DECODE_STEPS:
+        return "decode"
+    return "other"
+
+
 def greedy_sample(logits: jax.Array, vocab_size: int) -> jax.Array:
     vp = logits.shape[-1]
     if vp != vocab_size:
