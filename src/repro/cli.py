@@ -100,7 +100,8 @@ def cmd_ps(rt: Runtime, args) -> int:
                 # per-placement-policy spillover/rejection counters
                 policy = "".join(
                     f" {pol}[spill={c.get('spillover', 0)}"
-                    f",rej={c.get('rejected', 0)}]"
+                    f",rej={c.get('rejected', 0)}"
+                    f",shed={c.get('shed', 0)}]"
                     for pol, c in sorted(pod.get("by_policy", {}).items()))
                 print(f"{pod.get('router', p.stem):26s} "
                       f"policy={pod.get('policy', '?')} "
@@ -109,6 +110,7 @@ def cmd_ps(rt: Runtime, args) -> int:
                       f"free={pod.get('free_slots', 0)} "
                       f"pending={pod.get('pending', 0)} "
                       f"rejected={pod.get('rejected', 0)} "
+                      f"shed={pod.get('shed', 0)} "
                       f"spilled={pod.get('spilled', 0)}{policy} "
                       f"draining={draining} {phase:8s}")
                 continue
@@ -124,6 +126,9 @@ def cmd_ps(rt: Runtime, args) -> int:
                       f" shared={sum(c['shared_pages'] for c in pcs)}"
                       if pcs else "")
             wasted = sum(r.get("tokens_wasted", 0) for r in reps)
+            preempts = sum(r.get("preemptions", 0) for r in reps)
+            qos = (f" preempt={preempts}" if preempts else "") + (
+                f" shed={pod['shed']}" if pod.get("shed") else "")
             # p50/p99 from the registry snapshot riding the state file;
             # '-' when no request ever completed (0 would read as instant)
             p50, p99 = _snap_latency(pod.get("metrics", {}))
@@ -132,7 +137,7 @@ def cmd_ps(rt: Runtime, args) -> int:
                   f"replicas={len(reps)} capacity={pod.get('capacity', 0)} "
                   f"free={pod.get('free_slots', 0)} "
                   f"active={active} prefills={prefills} "
-                  f"rejected={pod.get('rejected', 0)} wasted={wasted} "
+                  f"rejected={pod.get('rejected', 0)} wasted={wasted}{qos} "
                   f"p50/p99={p50}/{p99}{prefix} {phase:8s} "
                   f"ref={pod.get('ref') or '-'}"
                   + (f" router={router}" if router else ""))
@@ -173,6 +178,14 @@ def cmd_serve(rt: Runtime, args) -> int:
         argv += ["--prefix-cache"]
     if args.shared_prefix:
         argv += ["--shared-prefix", str(args.shared_prefix)]
+    if args.batch_every:
+        argv += ["--batch-every", str(args.batch_every)]
+    if args.deadline_ticks is not None:
+        argv += ["--deadline-ticks", str(args.deadline_ticks)]
+    if args.shed_queue_depth is not None:
+        argv += ["--shed-queue-depth", str(args.shed_queue_depth)]
+    if args.shed_ttft_p99 is not None:
+        argv += ["--shed-ttft-p99", str(args.shed_ttft_p99)]
     if args.trace:
         argv += ["--trace", args.trace]
     serve_main(argv)
@@ -197,7 +210,8 @@ def cmd_top(rt: Runtime, args) -> int:
         pods_dir = rt.root / "pods"
         files = sorted(pods_dir.glob("*.json")) if pods_dir.exists() else []
         print(f"{'NAME':26s} {'PHASE':8s} {'QUEUE':>5s} {'POOL':>9s} "
-              f"{'PREFIX':>7s} {'WASTED':>6s} {'TOKENS':>7s} "
+              f"{'PREFIX':>7s} {'WASTED':>6s} {'PREEMPT':>7s} {'SHED':>5s} "
+              f"{'TOKENS':>7s} "
               f"{'P50/P99':>9s} {'TTFT':>9s} {'ITL':>11s}")
         shown = 0
         for p in files:
@@ -234,6 +248,8 @@ def cmd_top(rt: Runtime, args) -> int:
                    if snapshot_count(snap, "itl_milliticks") else "-")
             print(f"{name:26s} {phase:8s} {queue:>5d} {pool:>9s} "
                   f"{rate:>7s} {snapshot_total(snap, 'tokens_wasted'):>6d} "
+                  f"{snapshot_total(snap, 'preemptions'):>7d} "
+                  f"{snapshot_total(snap, 'requests_shed'):>5d} "
                   f"{snapshot_total(snap, 'tokens_out'):>7d} "
                   f"{lat:>9s} {ttft:>9s} {itl:>11s}")
             shown += 1
@@ -319,6 +335,17 @@ def main(argv=None) -> int:
     p.add_argument("--shared-prefix", type=int, default=0,
                    help="prepend an N-token shared system prompt to the "
                         "trace")
+    p.add_argument("--batch-every", type=int, default=0,
+                   help="tag every Nth request as batch QoS (sheddable + "
+                        "preemptible); 0 = all interactive")
+    p.add_argument("--deadline-ticks", type=int, default=None,
+                   help="admission deadline (ticks) for batch requests")
+    p.add_argument("--shed-queue-depth", type=int, default=None,
+                   help="router overload threshold: shed batch traffic at "
+                        "queue depth >= N")
+    p.add_argument("--shed-ttft-p99", type=int, default=None,
+                   help="router overload threshold: shed batch traffic at "
+                        "ttft p99 >= N ticks")
     p.add_argument("--trace", default=None, metavar="PATH",
                    help="export request-lifecycle spans as Chrome "
                         "trace-event JSON (open in Perfetto)")

@@ -62,12 +62,21 @@ def _build_requests(args, cfg, rng):
     ``GenRequest.prefix_len`` -- the trace the prefix page cache and the
     prefix-hash router policy are measured on. The block is drawn from the
     rng FIRST, so the per-request tail of the trace is identical whether
-    or not caching is enabled (same flags -> bitwise-same trace)."""
+    or not caching is enabled (same flags -> bitwise-same trace).
+
+    ``--batch-every N`` tags every Nth request (rid % N == N-1) as the
+    ``batch`` QoS class -- sheddable under overload, preemptible under
+    pool pressure; 0 (default) leaves the whole trace interactive.
+    ``--deadline-ticks D`` puts an admission deadline on the batch
+    requests (the tier the SLO policy may drop). Neither flag changes the
+    prompts or budgets, so QoS on/off replays the same token trace."""
     from repro.orchestrator import GenRequest
     reqs = []
     budgets = _tail_budgets(args.gen, args.requests)
     fe_len = _frontend_width(cfg)
     shared = max(0, int(getattr(args, "shared_prefix", 0)))
+    batch_every = max(0, int(getattr(args, "batch_every", 0)))
+    deadline = getattr(args, "deadline_ticks", None)
     sys_prompt = rng.integers(0, cfg.vocab_size, shared) if shared else None
     for i in range(args.requests):
         plen = int(args.prompt_len * (0.5 + 0.5 * ((i * 7919) % 97) / 96))
@@ -76,13 +85,16 @@ def _build_requests(args, cfg, rng):
         prompt = rng.integers(0, cfg.vocab_size, max(1, plen))
         if shared:
             prompt = np.concatenate([sys_prompt, prompt])
+        is_batch = batch_every and i % batch_every == batch_every - 1
         reqs.append(GenRequest(
             rid=i,
             prompt=prompt,
             max_new_tokens=budgets[i],
             arrival=i // max(1, getattr(args, "arrive_per_tick", 8)),
             frontend=fe,
-            prefix_len=shared))
+            prefix_len=shared,
+            priority="batch" if is_batch else "interactive",
+            deadline_ticks=deadline if is_batch else None))
     return reqs
 
 
@@ -123,7 +135,11 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
         # fleet: one router surface over per-pod schedulers/queues
         driver = PodRouter(pods,
                            policy=getattr(args, "policy", "shortest-queue"),
-                           fairness_cap=args.fairness_cap)
+                           fairness_cap=args.fairness_cap,
+                           shed_queue_depth=getattr(
+                               args, "shed_queue_depth", None),
+                           shed_ttft_p99=getattr(
+                               args, "shed_ttft_p99", None))
     else:
         driver = ContinuousScheduler(pods[0],
                                      fairness_cap=args.fairness_cap)
@@ -163,6 +179,12 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
             "tokens_saved": sum(e.prefix_tokens_saved for e in engines),
         },
         "tokens_wasted": sum(e.tokens_wasted for e in engines),
+        # QoS accounting: page-level preemptions/resumes on the engines,
+        # sheds at the router (overload) and schedulers (deadline)
+        "preemptions": sum(e.preemptions for e in engines),
+        "resumes": sum(e.resumes for e in engines),
+        "shed": (driver.shed_total if n_pods > 1
+                 else len(driver.shedded)),
         # nearest-rank percentiles, measured from request ARRIVAL (the
         # trace stagger is offered load, not serving latency)
         **latency_summary(done),
@@ -174,6 +196,11 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
     buffers = (driver.trace_buffers() if n_pods > 1
                else [pods[0].trace])
     out["decomposition"] = decomposition(buffers)
+    if getattr(args, "batch_every", 0):
+        # mixed-QoS trace: the per-class split is the fig10 deliverable
+        out["decomposition_interactive"] = decomposition(
+            buffers, priority="interactive")
+        out["decomposition_batch"] = decomposition(buffers, priority="batch")
     trace_path = getattr(args, "trace", None)
     if trace_path:
         trace = export_chrome(buffers, trace_path)
@@ -206,6 +233,9 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
     if pc["enabled"]:
         print(f"[serve] prefix cache: {pc['hits']} hits / {pc['misses']} "
               f"misses, {pc['tokens_saved']} prefill tokens skipped")
+    if out["preemptions"] or out["shed"]:
+        print(f"[serve] qos: {out['preemptions']} preemptions / "
+              f"{out['resumes']} resumes, {out['shed']} shed")
     return out
 
 
@@ -326,6 +356,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend one fixed N-token system prompt to every "
                          "request (the shared-prefix trace)")
+    ap.add_argument("--batch-every", type=int, default=0,
+                    help="tag every Nth request as the batch QoS class "
+                         "(sheddable + preemptible); 0 = all interactive")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    help="admission deadline for batch requests: shed if "
+                         "not admitted within D ticks of arrival")
+    ap.add_argument("--shed-queue-depth", type=int, default=None,
+                    help="router shedding threshold (--pods > 1): shed "
+                         "batch submissions when every fitting pod's "
+                         "queue_depth gauge is at or over N")
+    ap.add_argument("--shed-ttft-p99", type=int, default=None,
+                    help="router shedding threshold (--pods > 1): shed "
+                         "batch submissions when every fitting pod's "
+                         "ttft p99 is at or over N ticks")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="export the run's request-lifecycle spans as "
                          "Chrome trace-event JSON (open in Perfetto)")

@@ -29,13 +29,15 @@ capacity.
 from repro.orchestrator.deployer import RollingDeployer
 from repro.orchestrator.page_pool import PagePool
 from repro.orchestrator.pod import Pod
-from repro.orchestrator.request_queue import GenRequest, RequestQueue
+from repro.orchestrator.request_queue import (PRIORITIES, GenRequest,
+                                              RequestQueue)
 from repro.orchestrator.router import PLACEMENT_POLICIES, PodRouter
 from repro.orchestrator.scheduler import ContinuousScheduler, SlotEngine
 from repro.orchestrator.telemetry import latency_summary, nearest_rank
 
 __all__ = [
     "GenRequest",
+    "PRIORITIES",
     "RequestQueue",
     "PagePool",
     "Pod",

@@ -57,24 +57,35 @@ def observe_completion(metrics: MetricsRegistry, *, arrival: int,
 
 def request_lifecycles(buffers) -> dict[int, dict]:
     """Per-request lifecycle digest from span buffers: rid -> {submit,
-    arrival, admit, done, tokens, chunks, rejected}. Buffers are merged
-    (router + pods), so route/reject events recorded at the router tier
-    land on the same rid as the pod-side spans."""
+    arrival, admit, done, tokens, chunks, rejected, shed, preemptions}.
+    Buffers are merged (router + pods), so route/reject/shed events
+    recorded at the router tier land on the same rid as the pod-side
+    spans. ``admit`` is the FIRST admission tick (the TTFT anchor) -- a
+    preempted request's resume never moves it."""
     out: dict[int, dict] = {}
     for buf in buffers:
         for e in buf.events():
             rec = out.setdefault(e.rid, {
                 "submit": None, "arrival": 0, "admit": None, "done": None,
-                "tokens": 0, "chunks": 0, "rejected": False})
+                "tokens": 0, "chunks": 0, "rejected": False, "shed": False,
+                "preemptions": 0, "priority": None})
             if e.name == "submit":
                 rec["submit"] = e.tick
                 rec["arrival"] = int(e.attr("arrival", 0))
             elif e.name == "admit":
-                rec["admit"] = e.tick
+                if rec["admit"] is None:
+                    rec["admit"] = e.tick
+                if e.attr("priority") is not None:
+                    rec["priority"] = e.attr("priority")
             elif e.name == "decode_chunk":
                 rec["chunks"] += 1
+            elif e.name == "preempt":
+                rec["preemptions"] += 1
             elif e.name == "reject":
                 rec["rejected"] = True
+                rec["done"] = e.tick
+            elif e.name == "shed":
+                rec["shed"] = True
                 rec["done"] = e.tick
             elif e.name == "complete":
                 rec["done"] = e.tick
@@ -82,22 +93,38 @@ def request_lifecycles(buffers) -> dict[int, dict]:
     return out
 
 
-def decomposition(buffers) -> dict:
+def decomposition(buffers, priority: str | None = None) -> dict:
     """TTFT / ITL percentiles across all COMPLETED requests in the span
     buffers, using the repo-wide nearest-rank definition on the exact
     per-request values. ``latency_count`` 0 means "no samples" -- render
-    ``-``, not 0 (the empty-input convention telemetry carries)."""
+    ``-``, not 0 (the empty-input convention telemetry carries).
+
+    Single-token completions have NO inter-token gap, so they are excluded
+    from the ITL percentile list (``itl_count`` is the ITL sample count):
+    counting their ``itl_milliticks == 0`` dragged reported ITL p50 toward
+    0 on prefill-heavy traces. The registry histograms keep recording the
+    0 samples -- the live-vs-recompute bitwise match is untouched.
+
+    ``priority`` filters to one QoS class (requests tagged via the admit
+    span's ``priority`` attr); None aggregates everything -- how fig10
+    separates interactive and batch percentiles from one overload trace.
+    """
     ttfts, itls = [], []
     for rec in request_lifecycles(buffers).values():
-        if rec["rejected"] or rec["admit"] is None or rec["done"] is None:
+        if rec["rejected"] or rec["shed"] or rec["admit"] is None \
+                or rec["done"] is None:
+            continue
+        if priority is not None and rec.get("priority") != priority:
             continue
         base = max(rec["arrival"], rec["submit"] if rec["submit"] is not None
                    else rec["admit"])
         ttfts.append(rec["admit"] - base)
-        itls.append(itl_milliticks(rec["admit"], rec["done"],
-                                   rec["tokens"]) / 1000.0)
+        if rec["tokens"] >= 2:
+            itls.append(itl_milliticks(rec["admit"], rec["done"],
+                                       rec["tokens"]) / 1000.0)
     return {
         "latency_count": len(ttfts),
+        "itl_count": len(itls),
         "ttft_p50_ticks": nearest_rank(ttfts, 50),
         "ttft_p99_ticks": nearest_rank(ttfts, 99),
         "itl_p50_ticks": nearest_rank(itls, 50),
@@ -116,6 +143,7 @@ def recompute_registry(buffers) -> MetricsRegistry:
     reg = MetricsRegistry()
     reg.counter("requests_rejected")
     reg.counter("requests_completed")
+    reg.counter("requests_shed")
     reg.counter("tokens_out")
     reg.histogram("latency_ticks", **TICK_HIST)
     reg.histogram("ttft_ticks", **TICK_HIST)
@@ -124,6 +152,9 @@ def recompute_registry(buffers) -> MetricsRegistry:
         rec = rec[1]
         if rec["rejected"]:
             reg.counter("requests_rejected").inc()
+            continue
+        if rec["shed"]:
+            reg.counter("requests_shed").inc()
             continue
         if rec["admit"] is None or rec["done"] is None:
             continue                    # still in flight at snapshot time
@@ -137,7 +168,7 @@ def recompute_registry(buffers) -> MetricsRegistry:
 
 
 COMPLETION_METRICS = ("requests_completed", "requests_rejected",
-                      "tokens_out")
+                      "requests_shed", "tokens_out")
 COMPLETION_HISTOGRAMS = ("latency_ticks", "ttft_ticks", "itl_milliticks")
 
 

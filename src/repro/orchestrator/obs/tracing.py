@@ -3,8 +3,12 @@ with a Chrome trace-event exporter.
 
 Every ``GenRequest`` accrues point events as it moves through the stack::
 
-    submit -> [route] -> queue -> admit|reject -> prefill
-           -> decode_chunk* -> complete
+    submit -> [route] -> queue -> admit|reject|shed -> prefill
+           -> decode_chunk* -> [preempt -> resume -> ...]* -> complete
+
+``shed`` is the QoS overload path (router threshold shedding or a missed
+admission deadline); ``preempt``/``resume`` bracket a page-level
+preemption (pages released mid-decode, suffix re-prefill later).
 
 recorded into the owning pod's ``TraceBuffer`` (the router keeps its own
 buffer for placement events and fleet-level rejections). Timestamps are
@@ -28,8 +32,8 @@ from collections import deque
 from dataclasses import dataclass
 from pathlib import Path
 
-SPAN_KINDS = ("submit", "route", "queue", "admit", "reject", "prefill",
-              "decode_chunk", "complete")
+SPAN_KINDS = ("submit", "route", "queue", "admit", "reject", "shed",
+              "prefill", "decode_chunk", "preempt", "resume", "complete")
 
 # one tick rendered as 1000 "microseconds" so sub-tick spans (prefill) stay
 # visible at default Perfetto zoom
@@ -117,11 +121,13 @@ def export_chrome(buffers, path: str | Path | None = None) -> dict:
     per request; point events are paired into ``X`` complete spans:
 
     * ``queue``   : submit (or arrival, whichever is later) -> admit/reject
-    * ``prefill`` : the admission tick (1 tick wide), with positions/pages/
-      prefix-hit attrs
+    * ``prefill`` : the admission (or resume) tick (1 tick wide), with
+      positions/pages/prefix-hit attrs
     * ``decode``  : one span per decode chunk, ``chunk`` ticks wide
+    * ``paused``  : preempt -> resume (pages released, request queued)
     * ``generate``: admit -> complete envelope (tokens attr)
-    * ``route`` / ``reject`` / ``complete``: instants
+    * ``route`` / ``reject`` / ``shed`` / ``preempt`` / ``resume`` /
+      ``complete``: instants
     """
     events = []
     for pid, buf in enumerate(buffers):
@@ -131,6 +137,7 @@ def export_chrome(buffers, path: str | Path | None = None) -> dict:
             tid = rid
             submit = admit = None
             baseline = None
+            preempt = None
             for e in evs:
                 if e.name == "submit":
                     submit = e
@@ -143,6 +150,24 @@ def export_chrome(buffers, path: str | Path | None = None) -> dict:
                     if baseline is not None:
                         events.append(_x("queue", baseline,
                                          e.tick - baseline, pid, tid, rid))
+                elif e.name == "preempt":
+                    preempt = e
+                    events.append(_i("preempt", e.tick, pid, tid, rid,
+                                     **dict(e.attrs)))
+                elif e.name == "resume":
+                    if preempt is not None:
+                        events.append(_x("paused", preempt.tick,
+                                         e.tick - preempt.tick, pid, tid,
+                                         rid))
+                        preempt = None
+                    events.append(_i("resume", e.tick, pid, tid, rid,
+                                     **dict(e.attrs)))
+                elif e.name == "shed":
+                    if baseline is not None:
+                        events.append(_x("queue", baseline,
+                                         e.tick - baseline, pid, tid, rid))
+                    events.append(_i("shed", e.tick, pid, tid, rid,
+                                     **dict(e.attrs)))
                 elif e.name == "prefill":
                     events.append(_x("prefill", e.tick, 1, pid, tid, rid,
                                      **dict(e.attrs)))
@@ -180,9 +205,10 @@ def export_chrome(buffers, path: str | Path | None = None) -> dict:
 def validate_chrome_trace(trace: dict | str | Path) -> dict:
     """Minimal schema check for an exported trace (the CI gate): a
     non-empty ``traceEvents`` list, every event carrying ``ph``/``ts``/
-    ``pid``/``name``, non-negative durations, and timestamps monotone
-    per request (grouped by ``(pid, args.rid)``). Raises ``ValueError``
-    with the first violation; returns summary stats on success."""
+    ``pid``/``name``, complete (``ph:"X"``) events carrying a present and
+    non-negative ``dur``, and timestamps monotone per request (grouped by
+    ``(pid, args.rid)``). Raises ``ValueError`` with the first violation;
+    returns summary stats on success."""
     if not isinstance(trace, dict):
         trace = json.loads(Path(trace).read_text())
     events = trace.get("traceEvents")
@@ -196,8 +222,14 @@ def validate_chrome_trace(trace: dict | str | Path) -> dict:
                 raise ValueError(f"event {i} ({e}) is missing {key!r}")
         if e["ph"] == "M":
             continue
-        if e["ph"] == "X" and e.get("dur", 0) < 0:
-            raise ValueError(f"event {i} has negative duration")
+        if e["ph"] == "X":
+            # a complete event without ANY dur is malformed, not 0-length:
+            # defaulting it used to let dur-less spans slide through CI
+            if "dur" not in e:
+                raise ValueError(f"event {i} ({e['name']}) is a complete "
+                                 "event with no 'dur'")
+            if e["dur"] < 0:
+                raise ValueError(f"event {i} has negative duration")
         rid = (e.get("args") or {}).get("rid")
         if rid is None:
             raise ValueError(f"event {i} carries no args.rid")

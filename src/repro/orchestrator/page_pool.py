@@ -20,6 +20,14 @@ Allocation protocol (reservation-based, preempt-free):
     reserved pages without them ever leaving the free-list.
   * ``release(slot)`` at COMPLETION returns owned pages and the remaining
     reservation in one step and resets the table row.
+  * ``pause(slot)`` is page-level PREEMPTION: the same full reclaim as
+    ``release`` (private pages freed, reservation returned, shared pages
+    decref'd) but the slot is marked *paused* -- ``check()`` pins that a
+    paused slot holds nothing until a later ``reserve`` (the resume's
+    suffix re-prefill) clears the flag. Preemption is the one deliberate
+    exception to the preempt-free promise above: the SCHEDULER invokes it
+    only against a lower-priority victim, so interactive admissions can
+    reclaim pages without the pool ever over-committing.
 
 Prefix sharing (the container-layer analogy: immutable image layers shared
 by many containers):
@@ -95,6 +103,9 @@ class PagePool:
         # exclusively held, cached pages at refcount 0 are evictable)
         self.refcount = np.zeros(self.n_pages, np.int64)
         self.prefix: dict[str, PrefixEntry] = {}
+        # slots paused by page-level preemption: all pages reclaimed, the
+        # owning request waits queued for resume (check() pins emptiness)
+        self.paused: set[int] = set()
         self._clock = 0
         # accounting (status + the fig7/fig9 benchmarks) lives in the shared
         # registry (the pod's when embedded, a private one standalone); the
@@ -108,6 +119,7 @@ class PagePool:
         self._c_evict = self.metrics.counter("pool_evictions", **labels)
         self._c_cow = self.metrics.counter("cow_copies", **labels)
         self._c_phits = self.metrics.counter("pool_prefix_hits", **labels)
+        self._c_paused = self.metrics.counter("pool_preemptions", **labels)
         self._g_in_use = self.metrics.gauge("pool_in_use", **labels)
 
     # registry-backed shims for the pre-registry attribute names
@@ -191,6 +203,9 @@ class PagePool:
         if not self.can_reserve(n):
             raise RuntimeError(
                 f"cannot reserve {n} pages: {self.free_unreserved} unreserved")
+        # a paused slot coming back through reserve IS the resume: the
+        # suffix re-prefill re-books its worst case like a fresh admission
+        self.paused.discard(slot)
         self.reserved[slot] = n
 
     def _take_page(self) -> int:
@@ -248,7 +263,23 @@ class PagePool:
         self.shared[slot] = []
         self.reserved[slot] = 0
         self.table[slot, :] = GARBAGE_PAGE
+        self.paused.discard(slot)
         self._g_in_use.set(self.in_use)
+
+    def pause(self, slot: int) -> int:
+        """Page-level preemption of ``slot``: reclaim its private pages and
+        unfilled reservation (and decref its shared mappings) exactly like
+        ``release``, then mark the slot paused. Returns the number of pages
+        returned to the free-list. The paused mark is bookkeeping for
+        ``check()`` -- a paused slot must hold NOTHING until its resume
+        re-reserves -- and clears on the next ``reserve`` or ``release``."""
+        if not (self.reserved[slot] or self.owned[slot] or self.shared[slot]):
+            raise RuntimeError(f"slot {slot} has nothing to preempt")
+        freed = len(self.owned[slot])
+        self.release(slot)
+        self.paused.add(slot)
+        self._c_paused.inc()
+        return freed
 
     # -- prefix sharing -----------------------------------------------------
     def lookup(self, digest: str, tokens: np.ndarray,
@@ -405,6 +436,13 @@ class PagePool:
         unfilled = self.total_reserved - self.total_owned
         assert unfilled <= len(self.free) + self.evictable_pages, \
             "outstanding reservations exceed reclaimable pages"
+        # paused (preempted) slots hold NOTHING: their pages were reclaimed
+        # at pause time and nothing may creep back before resume re-reserves
+        assert self.paused <= set(range(self.n_slots)), "phantom paused slot"
+        for slot in self.paused:
+            assert not self.owned[slot] and not self.shared[slot] \
+                and not self.reserved[slot], \
+                f"paused slot {slot} still holds pages or a reservation"
 
     def status(self) -> dict:
         return {
@@ -419,4 +457,6 @@ class PagePool:
             "prefix_hits": self.prefix_hits,
             "evictions": self.evictions,
             "cow_copies": self.cow_copies,
+            "preemptions": self._c_paused.value,
+            "paused_slots": len(self.paused),
         }

@@ -63,6 +63,9 @@ class Pod:
         # fronts this pod (a burst of rejections is a served-badly signal
         # `repro ps` must show even when no slot occupancy changed)
         self.rejected = 0
+        # pod-lifetime QoS shed counter (admission-deadline misses charged
+        # to this pod; router-tier overload sheds are counted at the router)
+        self.shed = 0
         # router tier membership: PodRouter stamps its id here so `ps` can
         # read a fleet as one unit; None = standalone pod
         self.router: str | None = None
@@ -121,6 +124,7 @@ class Pod:
             "capacity": self.capacity,
             "free_slots": self.free_slots,
             "rejected": self.rejected,
+            "shed": self.shed,
             "router": self.router,
             "phase": ("serving" if any(e.active for e in self.engines)
                       else "idle"),

@@ -71,7 +71,8 @@ class PodRouter:
 
     def __init__(self, pods: Iterable[Pod], *,
                  policy: str = "shortest-queue", fairness_cap: int = 4,
-                 vnodes: int = 64):
+                 vnodes: int = 64, shed_queue_depth: int | None = None,
+                 shed_ttft_p99: int | None = None):
         self.pods: list[Pod] = list(pods)
         if not self.pods:
             raise ValueError("a PodRouter needs at least one pod")
@@ -101,6 +102,15 @@ class PodRouter:
         self._state_tick = -self.STATE_EVERY
         self.completed: list[GenRequest] = []
         self.rejected: list[GenRequest] = []    # router-level (no pod fits)
+        self.shedded: list[GenRequest] = []     # QoS overload sheds
+        # SLO shedding policy, driven by the LIVE registry: a pod is
+        # overloaded when its queue_depth gauge or its merged ttft_ticks
+        # p99 crosses the threshold. Batch submissions that only have
+        # overloaded pods to land on are shed with a typed rejection
+        # instead of enqueued to stall; interactive traffic is never shed
+        # here. None disables that dimension (default: no shedding).
+        self.shed_queue_depth = shed_queue_depth
+        self.shed_ttft_p99 = shed_ttft_p99
         # router-tier observability: placement counters labelled by policy
         # (status renders them as "by_policy"), plus a span buffer for
         # route/reject events. ``requests_rejected`` mirrors the pod-level
@@ -112,6 +122,8 @@ class PodRouter:
         self._c_spilled = self.metrics.counter("spillover", policy=policy)
         self._c_rejected = self.metrics.counter("rejected", policy=policy)
         self._c_req_rejected = self.metrics.counter("requests_rejected")
+        self._c_shed = self.metrics.counter("shed", policy=policy)
+        self._c_req_shed = self.metrics.counter("requests_shed")
         # incremental outstanding-work ledger (tokens committed, not yet
         # finished) so shortest-queue placement is O(P log P) per request
         # instead of rescanning every queue and slot bank
@@ -186,6 +198,36 @@ class PodRouter:
         return next(
             (p for p in order if any(e.fits(req) for e in p.engines)), None)
 
+    def overloaded(self, pod: Pod) -> bool:
+        """The shedding policy's overload read, straight off the pod's
+        live registry: the ``queue_depth`` gauge (set by its scheduler on
+        every submit and tick) or the merged ``ttft_ticks`` p99 over the
+        configured threshold. False when no threshold is set."""
+        if (self.shed_queue_depth is not None
+                and pod.metrics.gauge("queue_depth").value
+                >= self.shed_queue_depth):
+            return True
+        if self.shed_ttft_p99 is not None:
+            h = pod.metrics.merged_histogram("ttft_ticks")
+            if h is not None and h.count \
+                    and h.percentile(99) >= self.shed_ttft_p99:
+                return True
+        return False
+
+    def _shed(self, req: GenRequest) -> None:
+        """Typed shed rejection at the router tier: every pod that could
+        fit this batch request is over the overload threshold."""
+        req.state, req.finish_reason = "shed", "shed"
+        req.error = ("shed: fleet overloaded (queue_depth >= "
+                     f"{self.shed_queue_depth}, ttft p99 >= "
+                     f"{self.shed_ttft_p99})")
+        req.done_tick = self.tick
+        self.shedded.append(req)
+        self._c_shed.inc()
+        self._c_req_shed.inc()
+        self.trace.record(req.rid, "shed", self.tick, reason="overload",
+                          priority=req.priority, policy=self.policy)
+
     def place(self, req: GenRequest) -> Pod | None:
         """The pod ``req`` would route to right now (spillover applied);
         None if no pod can ever fit it. Pure query -- no submission."""
@@ -194,10 +236,27 @@ class PodRouter:
     def submit(self, reqs: Iterable[GenRequest] | GenRequest) -> None:
         if isinstance(reqs, GenRequest):
             reqs = [reqs]
-        rejected_before = len(self.rejected)
+        refresh_before = len(self.rejected) + len(self.shedded)
+        shedding = (self.shed_queue_depth is not None
+                    or self.shed_ttft_p99 is not None)
         for req in reqs:
             order = self._candidates(req)
             chosen = self._first_fit(req, order)
+            if (chosen is not None and shedding
+                    and req.priority == "batch"):
+                # overload-spill before shed: a batch request prefers the
+                # policy's pod but takes any fitting non-overloaded pod
+                # over stalling; only when EVERY fitting pod is over the
+                # threshold is it shed. Interactive traffic bypasses this
+                # entirely -- the lanes + preemption downstream protect it.
+                under = next(
+                    (p for p in order
+                     if any(e.fits(req) for e in p.engines)
+                     and not self.overloaded(p)), None)
+                if under is None:
+                    self._shed(req)
+                    continue
+                chosen = under
             if chosen is None:
                 # EVERY pod agrees (draining ones included): infeasible
                 # fleet-wide. Reject at the router -- never enqueue a
@@ -227,10 +286,10 @@ class PodRouter:
                                 spilled=req.spilled)
             self._outstanding[chosen.pod_id] += req.max_new_tokens
             self._sched[chosen.pod_id].submit(req)
-        if len(self.rejected) != rejected_before:
-            # router-level rejections happen BETWEEN ticks (submit time),
-            # so the step() throttle would never see them: one refresh per
-            # rejecting submit batch keeps `repro ps` honest
+        if len(self.rejected) + len(self.shedded) != refresh_before:
+            # router-level rejections and sheds happen BETWEEN ticks
+            # (submit time), so the step() throttle would never see them:
+            # one refresh per rejecting submit batch keeps `repro ps` honest
             self.write_state()
 
     # -- drain control (the fleet-deployer hook) -----------------------------
@@ -320,6 +379,12 @@ class PodRouter:
         return (len(self.rejected)
                 + sum(len(s.rejected) for s in self.schedulers))
 
+    @property
+    def shed_total(self) -> int:
+        """Router-tier overload sheds + per-pod admission-deadline sheds."""
+        return (len(self.shedded)
+                + sum(len(s.shedded) for s in self.schedulers))
+
     def status(self) -> dict:
         return {
             "kind": "router",
@@ -334,10 +399,14 @@ class PodRouter:
             "spilled": self.spilled,
             "completed": len(self.completed),
             "rejected": self.rejected_total,
+            "shed": self.shed_total,
+            "shed_thresholds": {"queue_depth": self.shed_queue_depth,
+                                "ttft_p99": self.shed_ttft_p99},
             "by_policy": {self.policy: {
                 "routed": self._c_routed.value,
                 "spillover": self._c_spilled.value,
                 "rejected": self._c_rejected.value,
+                "shed": self._c_shed.value,
             }},
             "metrics": merge_snapshots(
                 [self.metrics.snapshot()]
@@ -352,6 +421,8 @@ class PodRouter:
                 "pending": self._sched[p.pod_id].queue.pending,
                 "active": sum(len(e.active) for e in p.engines),
                 "rejected": p.rejected,
+                "shed": p.shed,
+                "overloaded": self.overloaded(p),
                 "draining": p.pod_id in self._draining,
             } for p in self.pods],
         }

@@ -175,6 +175,10 @@ class SlotEngine:
         self._c_prefill_disp = self.metrics.counter("prefill_dispatches",
                                                     **lab)
         self._c_decode_disp = self.metrics.counter("decode_dispatches", **lab)
+        # page-level preemption: pauses (pages released mid-decode) and
+        # resumes (suffix re-prefill of prompt + generated-so-far)
+        self._c_preempted = self.metrics.counter("preemptions", **lab)
+        self._c_resumed = self.metrics.counter("resumes", **lab)
         self.prefill_s = 0.0
         self.decode_s = 0.0
 
@@ -214,6 +218,14 @@ class SlotEngine:
     @property
     def tokens_wasted(self) -> int:
         return self._c_wasted.value
+
+    @property
+    def preemptions(self) -> int:
+        return self._c_preempted.value
+
+    @property
+    def resumes(self) -> int:
+        return self._c_resumed.value
 
     # -- admission ----------------------------------------------------------
     def has_free(self) -> bool:
@@ -337,19 +349,36 @@ class SlotEngine:
 
     def start(self, req: GenRequest, tick: int) -> bool:
         """Prefill ``req`` into a free slot. Returns True if the request
-        already finished at prefill (budget of one token, or instant EOS)."""
+        already finished at prefill (budget of one token, or instant EOS).
+
+        A PREEMPTED request resumes here through the same path: its pages
+        were released at preemption, so the prefill recomputes KV for the
+        prompt plus every token generated before the pause except the last
+        -- that one stays the decode cursor, exactly where the unpreempted
+        run left it, so the continuation is token-for-token identical."""
         # chunked decode can overshoot a finished request by chunk-1 writes;
         # the scheduler pre-screens, so tripping this is an internal bug
         if not self.fits(req):
             raise ValueError(f"request {req.rid}: {self.reject_reason(req)}")
+        resuming = req.state == "preempted"
         slot = self.free.pop(0)
         self._c_slots_alloc.inc()
         req.slot, req.replica, req.state = slot, self.name, "running"
-        req.admit_tick = tick
-        self.trace.record(req.rid, "admit", tick, replica=self.name,
-                          slot=slot)
+        if req.admit_tick < 0:
+            # FIRST admission only: a resume never moves the TTFT anchor
+            req.admit_tick = tick
+        if resuming:
+            self._c_resumed.inc()
+            self.trace.record(req.rid, "resume", tick, replica=self.name,
+                              slot=slot, tokens_done=len(req.tokens))
+            seq = np.concatenate(
+                [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
+        else:
+            self.trace.record(req.rid, "admit", tick, replica=self.name,
+                              slot=slot, priority=req.priority)
+            seq = req.prompt
 
-        P = req.prompt_len
+        P = int(seq.shape[0])
         hit = self.prefix_hit(req, touch=True) if self.paged else None
         if hit is not None:
             entry, kp = hit
@@ -358,7 +387,7 @@ class SlotEngine:
             # positions offset past the shared prefix. Reservation covers
             # just the private (suffix + overshoot) pages.
             L = kp * self.page_size
-            sfx = req.prompt[L:]
+            sfx = seq[L:]
             S = int(sfx.shape[0])               # >= 1 by _prefix_block's cap
             # clamp so shared rows + suffix pages never outrun the table
             bucket = min(self.bucket(S), self.max_len - L)
@@ -409,7 +438,7 @@ class SlotEngine:
                     prompt_len=bucket, **shapes)
                 self._prefills[bucket] = prefill
             toks = np.zeros((1, bucket), np.int32)
-            toks[0, :P] = req.prompt
+            toks[0, :P] = seq
             fe_args = ()
             if self.fe_len:
                 # static-width prefix buffer; real rows packed ahead of the
@@ -449,11 +478,25 @@ class SlotEngine:
                 # prompt pages into the prefix index so later requests with
                 # the same block share them (first writer wins)
                 self._c_pmiss.inc()
-                digest, block, _ = blk
-                kc = req.prefix_len // self.page_size
+                # promote exactly the pages a later LOOKUP can match:
+                # _prefix_block caps at min(prefix_len, P-1) so the page
+                # holding the first suffix token stays private. Recomputing
+                # an uncapped prefix_len // page_size here used to cache one
+                # extra page when the whole prompt was prefix -- a page no
+                # lookup could ever reach, pinned until eviction (leak)
+                digest, block, kc = blk
                 if kc >= 1:
                     self.pool.cache_prefix(digest, block, slot, kc)
 
+        if resuming:
+            # the prefill re-sampled the token after seq's last element --
+            # a recomputation of tokens[-1]. The original sample is
+            # authoritative; keeping it as the decode cursor makes the
+            # resumed run bitwise-continue the unpreempted one.
+            self.pos[slot] = start_pos
+            self.cur_tok[slot] = req.tokens[-1]
+            self.active[slot] = req
+            return False
         req.tokens.append(first)
         self._c_tokens.inc()
         self.pos[slot] = start_pos      # next decode writes here
@@ -545,6 +588,34 @@ class SlotEngine:
             # full reclaim the same tick: owned pages + unused reservation
             self.pool.release(req.slot)
 
+    def preempt(self, req: GenRequest, tick: int) -> int:
+        """Page-level preemption: pause ``req`` mid-decode and reclaim its
+        slot plus every private page and unfilled reservation, making room
+        for a higher-priority admission. The generated-so-far tokens stay
+        on the request; ``start`` later resumes it by re-prefilling them as
+        a suffix. Returns the number of owned pages freed."""
+        if not self.paged:
+            raise RuntimeError(
+                f"engine {self.name}: preemption is page-granular "
+                "(paged mode only)")
+        slot = req.slot
+        if self.active.get(slot) is not req:
+            raise RuntimeError(
+                f"request {req.rid} is not running on engine {self.name}")
+        freed = self.pool.pause(slot)
+        self.active.pop(slot)
+        self.free.append(slot)
+        self._c_slots_freed.inc()
+        self.pos[slot] = 0              # park like _complete: free slots
+        self.cur_tok[slot] = 0          # are still dispatched every chunk
+        req.state, req.slot, req.replica = "preempted", None, None
+        req.preemptions += 1
+        self._c_preempted.inc()
+        self.trace.record(req.rid, "preempt", tick, replica=self.name,
+                          slot=slot, pages_freed=freed,
+                          tokens_done=len(req.tokens))
+        return freed
+
     def release(self) -> None:
         """Drop device state (params, slot cache, executables). Called at
         retirement so upgraded-away fleets do not pin a whole generation of
@@ -567,6 +638,8 @@ class SlotEngine:
             "decode_ticks": self.decode_ticks,
             "tokens_generated": self.tokens_generated,
             "tokens_wasted": self.tokens_wasted,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
             # one compiled prefill per distinct bucket -- bounded for
             # pow2-bucketed archs, per distinct prompt length in
             # exact-prefill mode (watch this in `ps` for unbounded growth)
@@ -601,6 +674,7 @@ class ContinuousScheduler:
         self._state_tick = -self.STATE_EVERY
         self.completed: list[GenRequest] = []
         self.rejected: list[GenRequest] = []
+        self.shedded: list[GenRequest] = []
         self.admission_order: list[int] = []
         # pod-level completion metrics, registered eagerly so an idle pod
         # still snapshots the full (empty) shape; geometry shared with
@@ -609,6 +683,7 @@ class ContinuousScheduler:
         self.trace = getattr(pod, "trace", None) or TraceBuffer()
         self._c_completed = self.metrics.counter("requests_completed")
         self._c_rejected = self.metrics.counter("requests_rejected")
+        self._c_shed = self.metrics.counter("requests_shed")
         self._c_tokens_out = self.metrics.counter("tokens_out")
         self._g_queue = self.metrics.gauge("queue_depth")
         self.metrics.histogram("latency_ticks", **TICK_HIST)
@@ -635,6 +710,20 @@ class ContinuousScheduler:
         self._c_rejected.inc()
         self.trace.record(req.rid, "reject", self.tick, reason="oversized")
 
+    def shed(self, req: GenRequest, reason: str) -> None:
+        """Typed QoS shed: terminal like a rejection, but counted apart --
+        the request was servable, the SLO policy chose not to serve it."""
+        req.state, req.finish_reason = "shed", reason
+        req.error = (f"shed: admission deadline of {req.deadline_ticks} "
+                     f"ticks missed" if reason == "deadline"
+                     else f"shed: {reason}")
+        req.done_tick = self.tick
+        self.shedded.append(req)
+        self.pod.shed += 1
+        self._c_shed.inc()
+        self.trace.record(req.rid, "shed", self.tick, reason=reason,
+                          priority=req.priority)
+
     # -- one global tick ------------------------------------------------------
     def step(self) -> list[GenRequest]:
         done: list[GenRequest] = []
@@ -652,14 +741,26 @@ class ContinuousScheduler:
                 self.reject(req)
                 rejected += 1
                 continue
+            # admission-deadline SLO: a queued head that can no longer be
+            # admitted in time is shed, not served uselessly late. Resumes
+            # are exempt -- their first token already left on time.
+            if (req.state == "queued" and req.deadline_ticks is not None
+                    and self.tick > max(req.arrival, req.submit_tick)
+                    + req.deadline_ticks):
+                self.queue.pop_ready(self.tick)
+                self.shed(req, "deadline")
+                rejected += 1
+                continue
             engines = [e for e in self.pod.engines if e.has_free()]
-            if not engines:
-                break
             ready = [e for e in engines if e.can_start(req)]
             if not ready:
-                # pool-pressure backpressure (paged): feasible but no pages
-                # free right now -- hold the FIFO head, in-flight requests
-                # keep decoding and will release pages; never preempt
+                # feasible but no slot / no pages free right now: hold the
+                # head -- unless it is an interactive head blocked behind
+                # running batch work, in which case page-level preemption
+                # pauses the youngest batch request to make room (strict
+                # QoS; equal-priority work is never preempted)
+                if self._try_preempt(req):
+                    continue
                 break
             # least-loaded engine keeps replica occupancy balanced without
             # breaking FIFO (the *request* order is still queue order);
@@ -669,8 +770,9 @@ class ContinuousScheduler:
             eng = min(ready, key=lambda e: (e.prefix_hit(req) is None,
                                             len(e.active)))
             self.queue.pop_ready(self.tick)
-            self.queue.admitted += 1
-            self.admission_order.append(req.rid)
+            if req.state == "queued":   # resumes were already counted
+                self.queue.admitted += 1
+                self.admission_order.append(req.rid)
             if eng.start(req, self.tick):
                 done.append(req)
             admitted += 1
@@ -691,6 +793,28 @@ class ContinuousScheduler:
             self.pod.write_state()
             self._state_tick = self.tick
         return done
+
+    def _try_preempt(self, req: GenRequest) -> bool:
+        """Page-level preemption on behalf of a blocked interactive head:
+        pause ONE running batch request (on a paged engine that could fit
+        ``req``), releasing its slot, private pages and reservation, and
+        requeue it at the front of the batch lane for a later resume.
+        Victim choice is deterministic: the most recently admitted batch
+        request (ties by rid) -- the least decode progress thrown away.
+        Returns True if a victim was paused (the admission loop retries the
+        head), False if there is nothing to preempt."""
+        if req.priority != "interactive":
+            return False
+        victims = [(e, r) for e in self.pod.engines
+                   if e.paged and not e.draining and e.fits(req)
+                   for r in e.active.values() if r.priority == "batch"]
+        if not victims:
+            return False
+        eng, victim = max(victims,
+                          key=lambda t: (t[1].admit_tick, t[1].rid))
+        eng.preempt(victim, self.tick)
+        self.queue.requeue(victim)
+        return True
 
     def _observe(self, req: GenRequest) -> None:
         """Feed one completion into the pod registry. Shares the formulas

@@ -232,6 +232,43 @@ def test_decomposition_and_recompute_from_synthetic_spans():
     assert empty["latency_count"] == 0 and empty["ttft_p50_ticks"] == 0
 
 
+def test_validator_requires_dur_on_complete_events():
+    # a ph:"X" event with no dur at all is malformed, not 0-length: the
+    # validator used to let it slide (only negative durs were caught)
+    trace = export_chrome([_synthetic_buffer()])
+    bad = json.loads(json.dumps(trace))
+    x = next(e for e in bad["traceEvents"] if e["ph"] == "X")
+    del x["dur"]
+    with pytest.raises(ValueError, match="no 'dur'"):
+        validate_chrome_trace(bad)
+    # the unmodified export still validates
+    validate_chrome_trace(trace)
+
+
+def test_single_token_completions_excluded_from_itl_percentiles():
+    t = TraceBuffer(name="pod-itl")
+    # rid 0: 5 tokens over 4 decode ticks -> a real inter-token sample
+    t.record(0, "submit", 0, arrival=0)
+    t.record(0, "admit", 1, replica="r0", slot=0)
+    t.record(0, "complete", 5, replica="r0", slot=0, tokens=5,
+             reason="length")
+    # rid 1: single-token completion -- no inter-token gap exists
+    t.record(1, "submit", 0, arrival=0)
+    t.record(1, "admit", 1, replica="r0", slot=1)
+    t.record(1, "complete", 1, replica="r0", slot=1, tokens=1,
+             reason="length")
+    d = decomposition([t])
+    assert d["latency_count"] == 2          # both still count for TTFT
+    assert d["itl_count"] == 1              # but only rid 0 has an ITL
+    # counting rid 1's itl_milliticks == 0 used to drag p50 to 0.5
+    assert d["itl_p50_ticks"] == d["itl_p99_ticks"] == 1.0
+    # the registry HISTOGRAM keeps recording the 0 sample: the
+    # live-vs-recompute bitwise match is untouched by the report fix
+    reg = recompute_registry([t])
+    h = reg.merged_histogram("itl_milliticks")
+    assert h.count == 2 and h.percentile(50) == 0
+
+
 # ---------------------------------------------------------------------------
 # end-to-end: spans + registry from a real served trace
 # ---------------------------------------------------------------------------
@@ -391,7 +428,7 @@ def test_router_policy_counters_and_ps_rendering(rt):
     assert router.spilled == 1 and len(router.rejected) == 1
     st_ = router.status()
     assert st_["by_policy"] == {"shortest-queue": {
-        "routed": 1, "spillover": 1, "rejected": 1}}
+        "routed": 1, "spillover": 1, "rejected": 1, "shed": 0}}
     # fleet rollup: pod completion metrics aggregate under the router
     assert snapshot_total(st_["metrics"], "requests_completed") == 1
     assert snapshot_total(st_["metrics"], "requests_rejected") == 1
@@ -403,7 +440,7 @@ def test_router_policy_counters_and_ps_rendering(rt):
     with redirect_stdout(io.StringIO()) as buf:
         assert cli_main(["--root", str(rt.root), "ps"]) == 0
     out = buf.getvalue()
-    assert "shortest-queue[spill=1,rej=1]" in out
+    assert "shortest-queue[spill=1,rej=1,shed=0]" in out
     assert "wasted=" in out
     # `small` served nothing: its latency renders '-', not a fake 0
     small_line = next(ln for ln in out.splitlines()

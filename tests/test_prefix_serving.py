@@ -200,6 +200,31 @@ def test_whole_prompt_equals_prefix_keeps_one_suffix_token(rt):
     assert list(hit_req.tokens) == list(ref.tokens)
 
 
+def test_promotion_never_caches_unreachable_pages(rt):
+    """Every page a MISS promotes into the index must be reachable by a
+    matching lookup. Promotion used to cache ``prefix_len // page_size``
+    pages while lookups cap at ``min(prefix_len, P-1) // page_size``: a
+    page-aligned whole-prompt block cached one page no hit could ever
+    share -- pinned in the index until eviction, a pure leak."""
+    block = np.random.default_rng(17).integers(0, 256, 2 * PS)
+    mk = lambda rid: GenRequest(rid=rid, prompt=block.copy(),
+                                max_new_tokens=2, prefix_len=2 * PS)
+    pod = _pod(rt, True)
+    _run(pod, [mk(0)])
+    eng = pod.engines[0]
+    pool = eng.pool
+    assert len(pool.prefix) == 1
+    entry = next(iter(pool.prefix.values()))
+    hit = eng.prefix_hit(mk(1))
+    assert hit is not None
+    _, kp = hit
+    # the lookup reaches EVERY cached page: nothing promoted beyond what
+    # min(prefix_len, P-1) allows
+    assert kp == len(entry.pages) == 1
+    assert pool.cached_pages == 1
+    pool.check()
+
+
 def test_sub_page_prefix_never_caches(rt):
     """A declared block smaller than one page has no whole page to share:
     no promotion, no hit, correct tokens."""

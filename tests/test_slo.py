@@ -1,0 +1,292 @@
+"""SLO-aware serving: priority lanes, admission deadlines, router
+shedding, and page-level preemption.
+
+The QoS acceptance bars, end-to-end: interactive traffic admits ahead of
+batch (strict priority, FIFO within a class), a batch head past its
+admission deadline is shed -- not served uselessly late, the router sheds
+batch submissions when every fitting pod is over the overload threshold
+(interactive is never shed), and an interactive arrival blocked by a full
+slot bank / page pool preempts the youngest running batch request --
+whose resume via suffix re-prefill continues the generation bitwise
+(token parity with a pressure-free run, pool invariants intact after
+every tick, zero requests lost).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.runtime import Runtime
+from repro.orchestrator import (ContinuousScheduler, GenRequest, Pod,
+                                PodRouter, RequestQueue)
+
+pytestmark = pytest.mark.orchestrator
+
+IMAGEFILE = """
+FROM scratch
+ARCH llama3.2-3b-smoke
+SHAPE decode_32k seq_len=64 global_batch=4
+MESH local
+PRECISION compute=float32 params=float32
+COLLECTIVES generic
+"""
+
+PS = 8                              # page size used throughout
+
+
+@pytest.fixture(scope="module")
+def rt(tmp_path_factory):
+    rt = Runtime(tmp_path_factory.mktemp("stevedore"))
+    rt.build(IMAGEFILE, tag="stable")
+    return rt
+
+
+def _req(rid, plen=8, gen=4, **kw):
+    rng = np.random.default_rng(rid + 1)
+    return GenRequest(rid=rid, prompt=rng.integers(0, 256, plen),
+                      max_new_tokens=gen, **kw)
+
+
+# ---------------------------------------------------------------------------
+# priority lanes (pure queue -- no pod)
+# ---------------------------------------------------------------------------
+
+def test_lanes_strict_priority_fifo_within_class():
+    q = RequestQueue()
+    b0, b1 = _req(0, priority="batch"), _req(1, priority="batch")
+    i0, i1 = _req(2), _req(3)           # interactive is the default
+    for r in (b0, b1, i0, i1):
+        q.submit(r)
+    assert len(q) == 4
+    assert q.pending_by_class() == {"interactive": 2, "batch": 2}
+    # arrived interactive heads drain first; FIFO within each class
+    order = [q.pop_ready(0).rid for _ in range(4)]
+    assert order == [i0.rid, i1.rid, b0.rid, b1.rid]
+    assert q.pop_ready(0) is None
+
+
+def test_lane_arrival_blocks_only_its_own_lane():
+    q = RequestQueue()
+    late_i = _req(0, arrival=5)
+    early_b = _req(1, priority="batch", arrival=0)
+    q.submit(late_i)
+    q.submit(early_b)
+    # the interactive head has not arrived: it must NOT stall batch work
+    assert q.peek_ready(0) is early_b
+    assert q.pop_ready(0) is early_b
+    assert not q.has_ready(0)
+    # once arrived, interactive resumes priority
+    assert q.pop_ready(5) is late_i
+
+
+def test_requeue_front_of_lane_and_preempted_only():
+    q = RequestQueue()
+    b0, b1 = _req(0, priority="batch"), _req(1, priority="batch")
+    q.submit(b0)
+    q.submit(b1)
+    victim = q.pop_ready(0)
+    with pytest.raises(ValueError, match="only preempted"):
+        q.requeue(victim)               # state is still "queued"
+    victim.state = "preempted"
+    q.requeue(victim)
+    # a preempted request resumes BEFORE everything queued in its class
+    assert q.pop_ready(0) is victim
+    assert q.pop_ready(0) is b1
+
+
+def test_qos_field_validation():
+    with pytest.raises(ValueError, match="priority"):
+        _req(0, priority="bulk")
+    with pytest.raises(ValueError, match="deadline_ticks"):
+        _req(0, deadline_ticks=-1)
+    r = _req(0, priority="batch", deadline_ticks=0)
+    assert r.priority == "batch" and r.deadline_ticks == 0
+
+
+# ---------------------------------------------------------------------------
+# admission deadline (scheduler tier)
+# ---------------------------------------------------------------------------
+
+def test_deadline_miss_sheds_at_admission(rt):
+    from repro.orchestrator.obs import (completion_snapshot,
+                                        recompute_registry)
+    pod = Pod(rt, "stable", replicas=1, n_slots=1, max_len=64)
+    sched = ContinuousScheduler(pod)
+    hog = _req(0, gen=12)                               # occupies the slot
+    doomed = _req(1, priority="batch", deadline_ticks=2)
+    ok = _req(2, priority="batch")                      # no deadline: waits
+    sched.submit([hog, doomed, ok])
+    sched.run(max_ticks=2000)
+    assert hog.state == "done" and ok.state == "done"
+    assert doomed.state == "shed"
+    assert doomed.finish_reason == "deadline"
+    assert "deadline" in doomed.error
+    assert doomed.done_tick > 2
+    assert sched.shedded == [doomed]
+    assert pod.shed == 1
+    assert sched.metrics.total("requests_shed") == 1
+    spans = [e.name for e in pod.trace.events() if e.rid == doomed.rid]
+    assert spans == ["submit", "shed"]
+    # the shed is a first-class lifecycle outcome: the span-log recompute
+    # counts it exactly like the live registry (bitwise snapshot match)
+    rec = recompute_registry([pod.trace])
+    assert (completion_snapshot(rec.snapshot())
+            == completion_snapshot(sched.metrics.snapshot()))
+
+
+# ---------------------------------------------------------------------------
+# router overload shedding
+# ---------------------------------------------------------------------------
+
+def test_router_sheds_batch_when_every_fitting_pod_overloaded(rt):
+    pod = Pod(rt, "stable", replicas=1, n_slots=2, max_len=64)
+    router = PodRouter([pod], shed_queue_depth=2)
+    backlog = [_req(i, gen=8) for i in range(3)]
+    router.submit(backlog)              # queue_depth gauge now 3 >= 2
+    shed_req = _req(3, priority="batch")
+    keep_req = _req(4)                  # interactive is NEVER shed
+    router.submit([shed_req, keep_req])
+    assert shed_req.state == "shed"
+    assert shed_req.finish_reason == "shed"
+    assert "overloaded" in shed_req.error
+    assert router.shedded == [shed_req] and router.shed_total == 1
+    assert keep_req.state == "queued"
+    router.run(max_ticks=2000)
+    assert all(r.state == "done" for r in backlog + [keep_req])
+    st = router.status()
+    assert st["shed"] == 1
+    assert st["by_policy"][router.policy]["shed"] == 1
+    shed_spans = [e for e in router.trace.events() if e.rid == shed_req.rid
+                  and e.name == "shed"]
+    assert len(shed_spans) == 1
+    assert shed_spans[0].attr("reason") == "overload"
+    # once the backlog drains the gauge drops: batch traffic flows again
+    late = _req(5, priority="batch")
+    router.submit(late)
+    router.run(max_ticks=2000)
+    assert late.state == "done"
+
+
+def test_router_spills_batch_to_non_overloaded_pod_before_shedding(rt):
+    pods = [Pod(rt, "stable", replicas=1, n_slots=2, max_len=64)
+            for _ in range(2)]
+    router = PodRouter(pods, shed_queue_depth=2)
+    # load ONLY the shortest-queue-preferred pod over the threshold
+    backlog = [_req(i, gen=10) for i in range(3)]
+    first = router.place(backlog[0])
+    for r in backlog:
+        r.pod = None
+    loaded = router.scheduler_for(first)
+    loaded.submit(backlog)              # direct: all 3 on one pod's queue
+    batch = _req(7, priority="batch")
+    router.submit(batch)
+    # overload-spill before shed: the other pod is under threshold
+    assert batch.state == "queued"
+    other = next(p for p in pods if p is not first)
+    assert batch.pod == other.pod_id
+    assert router.shed_total == 0
+
+
+def test_overloaded_reads_ttft_p99_from_live_registry(rt):
+    pod = Pod(rt, "stable", replicas=1, n_slots=2, max_len=64)
+    router = PodRouter([pod], shed_ttft_p99=10)
+    assert not router.overloaded(pod)   # no samples yet: never overloaded
+    from repro.orchestrator.obs.report import TICK_HIST
+    pod.metrics.histogram("ttft_ticks", **TICK_HIST).record(25)
+    assert router.overloaded(pod)
+    assert not PodRouter([pod]).overloaded(pod)     # thresholds off
+
+
+# ---------------------------------------------------------------------------
+# page-level preemption: pressure sweep, parity, invariants, zero loss
+# ---------------------------------------------------------------------------
+
+def _mixed_trace():
+    """Two long batch requests that saturate a 2-slot paged engine, then
+    interactive arrivals that can only admit by preempting one."""
+    reqs = [_req(0, gen=40, priority="batch"),
+            _req(1, gen=40, priority="batch")]
+    for k, tick in enumerate((4, 8, 12)):
+        reqs.append(_req(2 + k, gen=3, arrival=tick))
+    return reqs
+
+
+def test_preemption_parity_invariants_and_zero_loss(rt):
+    # tight pod: 2 slots, pool sized for exactly 2 in-flight spans, so an
+    # arrived interactive head finds neither a free slot nor free pages
+    span_pages = -(-(8 + 40 + 4) // PS)             # prompt+gen+chunk
+    tight = Pod(rt, "stable", replicas=1, n_slots=2, max_len=64,
+                paged=True, page_size=PS, n_pages=2 * span_pages + 1,
+                decode_chunk=4)
+    sched = ContinuousScheduler(tight)
+    reqs = _mixed_trace()
+    sched.submit(reqs)
+    while sched.busy:
+        sched.step()
+        for e in tight.engines:
+            e.pool.check()              # pool invariants after EVERY tick
+        assert sched.tick < 2000
+    eng = tight.engines[0]
+    assert eng.preemptions >= 1         # pressure actually forced a pause
+    assert eng.preemptions == eng.resumes       # every victim came back
+    # zero lost: every request reached a terminal completed state
+    assert all(r.state == "done" for r in reqs)
+    assert all(r.finish_reason in ("eos", "length") for r in reqs)
+    victims = [r for r in reqs if r.preemptions]
+    assert victims and all(r.priority == "batch" for r in victims)
+    # preempt/resume span bracketing per victim, and the TTFT anchor
+    # (admit span) recorded exactly once -- resumes never re-admit
+    by_rid = tight.trace.by_request()
+    for r in victims:
+        names = [e.name for e in by_rid[r.rid]]
+        assert names.count("preempt") == names.count("resume") \
+            == r.preemptions
+        assert names.count("admit") == 1
+        assert names.index("preempt") < names.index("resume")
+    assert eng.pool.status()["paused_slots"] == 0   # nothing left paused
+
+    # parity: the same trace on a roomy pod (no pressure, no preemption)
+    # produces bitwise-identical tokens request-for-request
+    roomy = Pod(rt, "stable", replicas=1, n_slots=8, max_len=64,
+                paged=True, page_size=PS, n_pages=8 * span_pages + 1,
+                decode_chunk=4)
+    ref_sched = ContinuousScheduler(roomy)
+    ref = _mixed_trace()
+    ref_sched.submit(ref)
+    ref_sched.run(max_ticks=2000)
+    assert all(e.preemptions == 0 for e in roomy.engines)
+    assert {r.rid: list(r.tokens) for r in reqs} \
+        == {r.rid: list(r.tokens) for r in ref}
+
+
+def test_interactive_head_never_preempts_interactive(rt):
+    # same pressure, but the running work is interactive too: strict QoS
+    # means the head WAITS (no same-class preemption, FIFO preserved)
+    span_pages = -(-(8 + 40 + 4) // PS)
+    pod = Pod(rt, "stable", replicas=1, n_slots=2, max_len=64,
+              paged=True, page_size=PS, n_pages=2 * span_pages + 1,
+              decode_chunk=4)
+    sched = ContinuousScheduler(pod)
+    reqs = [_req(0, gen=40), _req(1, gen=40), _req(2, gen=3, arrival=4)]
+    sched.submit(reqs)
+    sched.run(max_ticks=2000)
+    assert all(r.state == "done" for r in reqs)
+    assert pod.engines[0].preemptions == 0
+    assert sched.admission_order == [0, 1, 2]
+
+
+def test_preempted_request_resumes_across_engines(rt):
+    # the resume is a plain admission: any fitting engine may take it,
+    # including a different replica than the one that paused it
+    span_pages = -(-(8 + 40 + 4) // PS)
+    pod = Pod(rt, "stable", replicas=2, n_slots=1, max_len=64,
+              paged=True, page_size=PS, n_pages=span_pages + 1, decode_chunk=4)
+    sched = ContinuousScheduler(pod)
+    reqs = [_req(0, gen=40, priority="batch"),
+            _req(1, gen=40, priority="batch"),
+            _req(2, gen=3, arrival=4)]
+    sched.submit(reqs)
+    sched.run(max_ticks=2000)
+    assert all(r.state == "done" for r in reqs)
+    assert sum(e.preemptions for e in pod.engines) >= 1
+    for e in pod.engines:
+        e.pool.check()
