@@ -1,0 +1,23 @@
+"""Static analysis for the serving stack (``repro lint``).
+
+Pure AST + string analysis of the repo's hand-maintained contracts --
+donation discipline, the single-writer metrics rule, the span-lifecycle
+state machine, PagePool mutation ownership, jit capture hygiene and
+tick determinism. No imports of the checked code, no jax: a full run
+takes well under a second.
+"""
+
+from repro.analysis.core import (
+    Check,
+    Finding,
+    LintResult,
+    Project,
+    all_checks,
+    load_baseline,
+    main,
+    run_lint,
+    write_baseline,
+)
+
+__all__ = ["Check", "Finding", "LintResult", "Project", "all_checks",
+           "load_baseline", "main", "run_lint", "write_baseline"]

@@ -1,0 +1,25 @@
+"""The six project-invariant checks behind ``repro lint``.
+
+Order here is presentation order for ``repro lint --list-rules``; each
+module's docstring is the authoritative statement of its contract.
+"""
+
+from repro.analysis.checks.donation import DonationCheck
+from repro.analysis.checks.metrics_writer import MetricsWriterCheck
+from repro.analysis.checks.span_lifecycle import SpanLifecycleCheck
+from repro.analysis.checks.pool_mutation import PoolMutationCheck
+from repro.analysis.checks.jit_capture import JitCaptureCheck
+from repro.analysis.checks.tick_determinism import TickDeterminismCheck
+
+ALL_CHECKS = [
+    DonationCheck,
+    MetricsWriterCheck,
+    SpanLifecycleCheck,
+    PoolMutationCheck,
+    JitCaptureCheck,
+    TickDeterminismCheck,
+]
+
+__all__ = ["ALL_CHECKS", "DonationCheck", "MetricsWriterCheck",
+           "SpanLifecycleCheck", "PoolMutationCheck", "JitCaptureCheck",
+           "TickDeterminismCheck"]

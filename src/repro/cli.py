@@ -197,6 +197,7 @@ def cmd_top(rt: Runtime, args) -> int:
     pod/router state files -- nothing is re-derived from raw counters."""
     import time
     from repro.orchestrator.obs.metrics import (snapshot_count,
+                                                snapshot_exemplar,
                                                 snapshot_percentile,
                                                 snapshot_total)
 
@@ -212,7 +213,7 @@ def cmd_top(rt: Runtime, args) -> int:
         print(f"{'NAME':26s} {'PHASE':8s} {'QUEUE':>5s} {'POOL':>9s} "
               f"{'PREFIX':>7s} {'WASTED':>6s} {'PREEMPT':>7s} {'SHED':>5s} "
               f"{'TOKENS':>7s} "
-              f"{'P50/P99':>9s} {'TTFT':>9s} {'ITL':>11s}")
+              f"{'P50/P99':>9s} {'TTFT':>9s} {'ITL':>11s} {'P99-RID':>7s}")
         shown = 0
         for p in files:
             try:
@@ -246,12 +247,16 @@ def cmd_top(rt: Runtime, args) -> int:
             itl = (f"{pct(snap, 'itl_milliticks', 50, 1e-3)}"
                    f"/{pct(snap, 'itl_milliticks', 99, 1e-3)}"
                    if snapshot_count(snap, "itl_milliticks") else "-")
+            # the exemplar rid behind the latency p99: the concrete
+            # request to pull out of the span trace when p99 spikes
+            p99_rid = snapshot_exemplar(snap, "latency_ticks", 99)
+            p99_rid = "-" if p99_rid is None else str(p99_rid)
             print(f"{name:26s} {phase:8s} {queue:>5d} {pool:>9s} "
                   f"{rate:>7s} {snapshot_total(snap, 'tokens_wasted'):>6d} "
                   f"{snapshot_total(snap, 'preemptions'):>7d} "
                   f"{snapshot_total(snap, 'requests_shed'):>5d} "
                   f"{snapshot_total(snap, 'tokens_out'):>7d} "
-                  f"{lat:>9s} {ttft:>9s} {itl:>11s}")
+                  f"{lat:>9s} {ttft:>9s} {itl:>11s} {p99_rid:>7s}")
             shown += 1
         if not shown:
             print("(no pod state found -- run `serve` first)")
@@ -278,6 +283,14 @@ def cmd_inspect(rt: Runtime, args) -> int:
 
 
 def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # `lint` forwards everything to repro.analysis's own argparse
+    # (argparse.REMAINDER mis-parses leading flags in subparsers) and must
+    # not construct a Runtime -- linting a bare checkout, e.g. in CI, may
+    # not create .stevedore
+    if argv[:1] == ["lint"]:
+        from repro.analysis import main as lint_main
+        return lint_main(argv[1:])
     ap = argparse.ArgumentParser(prog="stevedore")
     ap.add_argument("--root", default=".stevedore")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -356,7 +369,17 @@ def main(argv=None) -> int:
     p.add_argument("--watch", type=float, default=0, metavar="SECONDS",
                    help="refresh every N seconds until interrupted")
 
+    # static analysis: all flags forwarded to repro.analysis (its own
+    # argparse owns --strict/--rule/--baseline/--list-rules/--help)
+    p = sub.add_parser("lint", add_help=False,
+                       help="static analysis of the stack's contracts "
+                            "(repro lint --strict src tests)")
+    p.add_argument("lint_args", nargs=argparse.REMAINDER)
+
     args = ap.parse_args(argv)
+    if args.cmd == "lint":        # reached via `--root X lint ...`
+        from repro.analysis import main as lint_main
+        return lint_main(args.lint_args)
     rt = Runtime(args.root)
     return {
         "build": cmd_build, "images": cmd_images, "history": cmd_history,

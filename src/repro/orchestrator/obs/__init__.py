@@ -19,6 +19,7 @@ from repro.orchestrator.obs.metrics import (
     MetricsRegistry,
     merge_snapshots,
     snapshot_count,
+    snapshot_exemplar,
     snapshot_percentile,
     snapshot_total,
 )
@@ -34,10 +35,13 @@ from repro.orchestrator.obs.report import (
 )
 from repro.orchestrator.obs.tracing import (
     SPAN_KINDS,
+    SPAN_TRANSITIONS,
+    TERMINAL_SPANS,
     SpanEvent,
     TraceBuffer,
     export_chrome,
     validate_chrome_trace,
+    validate_span_log,
 )
 
 __all__ = [
@@ -46,7 +50,8 @@ __all__ = [
     "snapshot_total",
     "TICK_HIST", "ITL_HIST", "completion_snapshot", "decomposition",
     "itl_milliticks", "observe_completion", "recompute_registry",
-    "request_lifecycles",
-    "SPAN_KINDS", "SpanEvent", "TraceBuffer", "export_chrome",
-    "validate_chrome_trace",
+    "request_lifecycles", "snapshot_exemplar",
+    "SPAN_KINDS", "SPAN_TRANSITIONS", "TERMINAL_SPANS", "SpanEvent",
+    "TraceBuffer", "export_chrome", "validate_chrome_trace",
+    "validate_span_log",
 ]

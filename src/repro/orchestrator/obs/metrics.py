@@ -64,9 +64,17 @@ class Histogram:
     a lower bound instead of growing memory). ``percentile`` applies the
     repo-wide nearest-rank definition to the bucket counts and returns the
     rank-th sample's bucket lower bound.
+
+    Buckets optionally carry an *exemplar*: a representative request id
+    recorded alongside a sample, so a percentile read links back to a
+    concrete trace (``repro top`` shows the rid behind the p99).
+    Exemplars combine by minimum, which makes them independent of record
+    and merge order -- the live registry and the span-log recompute stay
+    bitwise-identical.
     """
 
-    __slots__ = ("width", "n_buckets", "counts", "count", "sum")
+    __slots__ = ("width", "n_buckets", "counts", "count", "sum",
+                 "exemplars")
 
     def __init__(self, width: int = 1, n_buckets: int = 512):
         if width < 1 or n_buckets < 1:
@@ -76,8 +84,9 @@ class Histogram:
         self.counts = [0] * self.n_buckets
         self.count = 0
         self.sum = 0
+        self.exemplars: dict[int, int] = {}
 
-    def record(self, v) -> None:
+    def record(self, v, *, exemplar: int | None = None) -> None:
         v = int(v)
         if v < 0:
             raise ValueError(f"histogram sample must be >= 0, got {v}")
@@ -85,6 +94,11 @@ class Histogram:
         self.counts[idx] += 1
         self.count += 1
         self.sum += v
+        if exemplar is not None:
+            exemplar = int(exemplar)
+            cur = self.exemplars.get(idx)
+            if cur is None or exemplar < cur:
+                self.exemplars[idx] = exemplar
 
     def percentile(self, pct: float):
         """Nearest-rank percentile at bucket resolution; 0 for no samples
@@ -112,6 +126,24 @@ class Histogram:
             self.counts[i] += c
         self.count += other.count
         self.sum += other.sum
+        for i, e in other.exemplars.items():
+            cur = self.exemplars.get(i)
+            if cur is None or e < cur:
+                self.exemplars[i] = e
+
+    def exemplar_at(self, pct: float) -> int | None:
+        """The exemplar rid of the bucket that ``percentile(pct)`` lands
+        in; None when the histogram is empty or the bucket never saw an
+        exemplar-carrying sample."""
+        if self.count == 0:
+            return None
+        rank = max(1, math.ceil(pct / 100.0 * self.count))
+        cum = 0
+        for i, c in enumerate(self.counts):
+            cum += c
+            if cum >= rank:
+                return self.exemplars.get(i)
+        return None                                  # pragma: no cover
 
     def snapshot(self) -> dict:
         # sparse counts: state files refresh every few ticks, and a dense
@@ -122,6 +154,8 @@ class Histogram:
             "count": self.count,
             "sum": self.sum,
             "counts": {str(i): c for i, c in enumerate(self.counts) if c},
+            "exemplars": {str(i): e
+                          for i, e in sorted(self.exemplars.items())},
         }
 
     @classmethod
@@ -131,6 +165,9 @@ class Histogram:
             h.counts[int(i)] = int(c)
         h.count = int(snap["count"])
         h.sum = int(snap["sum"])
+        # absent in pre-exemplar snapshots; default keeps them loadable
+        h.exemplars = {int(i): int(e)
+                       for i, e in snap.get("exemplars", {}).items()}
         return h
 
 
@@ -256,6 +293,24 @@ def snapshot_percentile(snap: dict, name: str, pct: float):
     if merged is None or merged.count == 0:
         return None
     return merged.percentile(pct)
+
+
+def snapshot_exemplar(snap: dict, name: str, pct: float) -> int | None:
+    """Representative rid behind ``snapshot_percentile(snap, name, pct)``:
+    merges the histogram across labels and returns the exemplar of the
+    nearest-rank bucket (None when absent)."""
+    series = snap.get("histograms", {}).get(name)
+    if not series:
+        return None
+    merged = None
+    for hs in series.values():
+        h = Histogram.from_snapshot(hs)
+        if merged is None:
+            merged = Histogram(width=h.width, n_buckets=h.n_buckets)
+        merged.merge(h)
+    if merged is None or merged.count == 0:
+        return None
+    return merged.exemplar_at(pct)
 
 
 def snapshot_count(snap: dict, name: str) -> int:

@@ -42,17 +42,22 @@ def itl_milliticks(admit_tick: int, done_tick: int, n_tokens: int) -> int:
 
 def observe_completion(metrics: MetricsRegistry, *, arrival: int,
                        submit_tick: int, admit_tick: int, done_tick: int,
-                       n_tokens: int) -> None:
+                       n_tokens: int, rid: int | None = None) -> None:
     """Record one completed request into a pod registry. The ONLY writer
     of the completion metrics -- the live scheduler and the span-log
-    recompute both call this, so they agree by construction."""
+    recompute both call this, so they agree by construction. ``rid``
+    tags each latency bucket with a representative request (exemplar), so
+    a p99 read links back to a concrete trace; exemplars min-combine, so
+    passing rids in any order keeps the bitwise match."""
     base = max(arrival, submit_tick)
     metrics.counter("requests_completed").inc()
     metrics.counter("tokens_out").inc(n_tokens)
-    metrics.histogram("latency_ticks", **TICK_HIST).record(done_tick - base)
-    metrics.histogram("ttft_ticks", **TICK_HIST).record(admit_tick - base)
+    metrics.histogram("latency_ticks", **TICK_HIST).record(
+        done_tick - base, exemplar=rid)
+    metrics.histogram("ttft_ticks", **TICK_HIST).record(
+        admit_tick - base, exemplar=rid)
     metrics.histogram("itl_milliticks", **ITL_HIST).record(
-        itl_milliticks(admit_tick, done_tick, n_tokens))
+        itl_milliticks(admit_tick, done_tick, n_tokens), exemplar=rid)
 
 
 def request_lifecycles(buffers) -> dict[int, dict]:
@@ -148,8 +153,7 @@ def recompute_registry(buffers) -> MetricsRegistry:
     reg.histogram("latency_ticks", **TICK_HIST)
     reg.histogram("ttft_ticks", **TICK_HIST)
     reg.histogram("itl_milliticks", **ITL_HIST)
-    for rec in sorted(request_lifecycles(buffers).items()):
-        rec = rec[1]
+    for rid, rec in sorted(request_lifecycles(buffers).items()):
         if rec["rejected"]:
             reg.counter("requests_rejected").inc()
             continue
@@ -163,7 +167,7 @@ def recompute_registry(buffers) -> MetricsRegistry:
             submit_tick=rec["submit"] if rec["submit"] is not None
             else rec["admit"],
             admit_tick=rec["admit"], done_tick=rec["done"],
-            n_tokens=rec["tokens"])
+            n_tokens=rec["tokens"], rid=rid)
     return reg
 
 

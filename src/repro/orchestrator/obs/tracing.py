@@ -35,6 +35,30 @@ from pathlib import Path
 SPAN_KINDS = ("submit", "route", "queue", "admit", "reject", "shed",
               "prefill", "decode_chunk", "preempt", "resume", "complete")
 
+# The lifecycle state machine as data: kind -> legal predecessors within
+# one (buffer, rid) span log. ``None`` means the kind may start a log:
+# ``route`` lands in the chosen pod's buffer before ``submit``, and the
+# router's own buffer opens fleet-level ``reject``/``shed`` logs with no
+# preceding submit. ``repro lint`` derives its span-lifecycle rule from
+# this table (keep it a pure literal) and ``validate_span_log`` replays
+# recorded buffers against it.
+SPAN_TRANSITIONS = {
+    "submit": (None, "route"),
+    "route": (None,),
+    "queue": ("submit",),
+    "admit": ("submit", "queue"),
+    "reject": (None, "submit", "queue", "preempt"),
+    "shed": (None, "submit", "queue", "preempt"),
+    "prefill": ("admit", "resume"),
+    "decode_chunk": ("prefill", "decode_chunk"),
+    "preempt": ("prefill", "decode_chunk"),
+    "resume": ("preempt",),
+    "complete": ("prefill", "decode_chunk"),
+}
+
+# kinds with no successors: once recorded, the (buffer, rid) log is closed
+TERMINAL_SPANS = ("reject", "shed", "complete")
+
 # one tick rendered as 1000 "microseconds" so sub-tick spans (prefill) stay
 # visible at default Perfetto zoom
 TICK_US = 1000
@@ -102,6 +126,55 @@ class TraceBuffer:
     def status(self) -> dict:
         return {"capacity": self.capacity, "buffered": len(self._events),
                 "recorded": self.recorded, "dropped": self.dropped}
+
+
+def validate_span_log(buffers) -> dict:
+    """Replay recorded span buffers against ``SPAN_TRANSITIONS``: within
+    each ``(buffer, rid)`` log every event's predecessor must be legal,
+    nothing may follow a terminal span, and ticks must be monotone.
+    Buffers that have dropped events (ring overflow) skip the
+    start-of-log check -- the true first span may have fallen off.
+    Raises ``ValueError`` at the first violation; returns summary stats.
+    """
+    n_buffers = 0
+    requests = 0
+    events = 0
+    for buf in buffers:
+        n_buffers += 1
+        truncated = buf.dropped > 0
+        for rid, evs in sorted(buf.by_request().items()):
+            requests += 1
+            prev = None
+            for e in evs:
+                events += 1
+                allowed = SPAN_TRANSITIONS.get(e.name)
+                if allowed is None:
+                    raise ValueError(
+                        f"{buf.name}/rid {rid}: unknown span kind "
+                        f"{e.name!r}")
+                if prev is None:
+                    if None not in allowed and not truncated:
+                        raise ValueError(
+                            f"{buf.name}/rid {rid}: log starts with "
+                            f"{e.name!r}, which requires a predecessor "
+                            f"in {allowed}")
+                else:
+                    if prev.name in TERMINAL_SPANS:
+                        raise ValueError(
+                            f"{buf.name}/rid {rid}: {e.name!r} recorded "
+                            f"after terminal span {prev.name!r}")
+                    if prev.name not in allowed:
+                        raise ValueError(
+                            f"{buf.name}/rid {rid}: illegal transition "
+                            f"{prev.name!r} -> {e.name!r} (legal "
+                            f"predecessors: {allowed})")
+                    if e.tick < prev.tick:
+                        raise ValueError(
+                            f"{buf.name}/rid {rid}: tick goes backwards "
+                            f"at {e.name!r} ({prev.tick} -> {e.tick})")
+                prev = e
+    return {"buffers": n_buffers, "requests": requests,
+            "events": events}
 
 
 def _x(name, ts, dur, pid, tid, rid, **args):

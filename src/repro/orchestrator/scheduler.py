@@ -823,7 +823,7 @@ class ContinuousScheduler:
         observe_completion(
             self.metrics, arrival=req.arrival, submit_tick=req.submit_tick,
             admit_tick=req.admit_tick, done_tick=req.done_tick,
-            n_tokens=len(req.tokens))
+            n_tokens=len(req.tokens), rid=req.rid)
 
     @property
     def busy(self) -> bool:

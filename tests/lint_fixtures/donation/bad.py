@@ -1,0 +1,17 @@
+"""Seeded violations for the donation rule: use-after-donation and a
+donated prefix pool. Linted by tests/test_lint.py, never imported."""
+import jax
+
+_step = jax.jit(lambda c, t: (c, t), donate_argnums=0)
+
+
+class Engine:
+    def tick(self, toks):
+        self.cache, out = _step(self.cache, toks)   # rebind: fine
+        _step(self.cache, toks)                     # donates, no rebind
+        return self.cache.sum()                     # BAD: use after donation
+
+
+def lower_pool_step(aparams, pool, toks):
+    fitted = jax.jit(lambda a, p, t: t, donate_argnums=(1,))
+    return fitted.lower(aparams, pool, toks)        # BAD: donates the pool

@@ -1,0 +1,17 @@
+"""Known-good donation patterns the rule must pass."""
+import jax
+
+_step = jax.jit(lambda c, t: (c, t), donate_argnums=0)
+
+
+class Engine:
+    def tick(self, toks):
+        # canonical shape: donate and rebind in one statement
+        self.cache, out = _step(self.cache, toks)
+        return out
+
+
+def lower_pool_step(aparams, pool, toks):
+    # prefix path: the pool is read, so it is lowered WITHOUT donation
+    fitted = jax.jit(lambda a, p, t: t)
+    return fitted.lower(aparams, pool, toks)

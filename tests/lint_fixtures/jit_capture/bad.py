@@ -1,0 +1,17 @@
+"""Seeded violations for the jit-capture rule."""
+import jax
+
+
+class Engine:
+    def lower(self):
+        # BAD: lambda captures per-tick mutable state
+        step = jax.jit(lambda t: t + self.pos)
+        g = jax.jit(self._fn, static_argnums=(1,))
+        # BAD: unhashable list literal at a static position
+        return step, g(self.params, [1, 2, 3])
+
+    def lower_nested(self):
+        def fn(t):
+            # BAD: locally-defined closure captures the decode cursor
+            return t + self.cur_tok
+        return jax.jit(fn)

@@ -1,0 +1,15 @@
+"""Known-good jit patterns the rule must pass."""
+import jax
+
+
+class Engine:
+    def lower(self):
+        # state flows through traced arguments, not the closure
+        step = jax.jit(lambda cache, toks: (cache, toks))
+        g = jax.jit(self._fn, static_argnums=(1,))
+        # tuples are hashable static args
+        return step, g(self.params, (1, 2, 3))
+
+    def lower_immutable(self):
+        # capturing construction-time immutables is fine
+        return jax.jit(lambda x: x * self.scale)

@@ -1,0 +1,26 @@
+"""Seeded violations for the metrics-writer rule."""
+TICK_HIST = dict(width=1, n_buckets=4096)
+
+
+def record_completion(metrics, done, base):
+    # BAD: completion histogram recorded outside observe_completion
+    metrics.histogram("latency_ticks", **TICK_HIST).record(done - base)
+
+
+def record_ttft(metrics, v):
+    h = metrics.histogram("ttft_ticks", **TICK_HIST)
+    h.record(v)                         # BAD: bound-name write
+
+
+def count_done(metrics):
+    metrics.counter("requests_completed").inc()     # BAD: protected counter
+
+
+def label_explosion(metrics, rid):
+    # BAD: f-string label -> one registry series per request
+    metrics.counter("fixture_requests", req=f"req-{rid}").inc()
+
+
+def kind_collision(metrics):
+    metrics.counter("fixture_depth").inc()
+    metrics.gauge("fixture_depth").set(3)           # BAD: counter vs gauge

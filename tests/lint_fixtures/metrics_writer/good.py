@@ -1,0 +1,11 @@
+"""Known-good metrics patterns the rule must pass."""
+TICK_HIST = dict(width=1, n_buckets=4096)
+
+
+def bind(metrics, replica):
+    # eager registration (no .record) of a protected name is fine --
+    # that is how schedulers surface empty histograms to repro top
+    metrics.histogram("latency_ticks", **TICK_HIST)
+    # unprotected metrics may be written anywhere, with bounded labels
+    metrics.counter("fixture_tokens_wasted", replica=replica).inc(4)
+    metrics.histogram("fixture_queue_wait", **TICK_HIST).record(3)

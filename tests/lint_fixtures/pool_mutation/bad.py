@@ -1,0 +1,8 @@
+"""Seeded violations for the pool-mutation rule."""
+
+
+class Scheduler:
+    def admit(self, pool, slot, page):
+        pool.refcount[page] += 1        # BAD: refcount poked directly
+        pool.free.append(page)          # BAD: free-list mutated directly
+        pool.reserved[slot] = 0         # BAD: reservation zeroed directly

@@ -1,0 +1,11 @@
+"""Known-good pool usage: everything goes through PagePool methods."""
+
+
+class Scheduler:
+    def admit(self, pool, slot, need, page_size):
+        pool.reserve(slot, need)
+        pool.alloc_upto(slot, need * page_size - 1)
+        # reads of internals are fine -- only mutation is restricted
+        depth = len(pool.free)
+        pool.check()
+        return depth

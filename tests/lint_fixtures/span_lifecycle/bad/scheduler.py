@@ -1,0 +1,14 @@
+"""Seeded violations for the span-lifecycle rule (named scheduler.py so
+the orchestrator closure check applies)."""
+
+
+class Scheduler:
+    def step(self, trace, rid, tick):
+        trace.record(rid, "submit", tick, arrival=tick)
+        trace.record(rid, "admit", tick)
+        trace.record(rid, "prefill", tick)
+        # BAD: preempt with no resume/shed/reject anywhere -> lifecycles
+        # entering the preempted state get stuck
+        trace.record(rid, "preempt", tick)
+        # BAD: unknown span kind
+        trace.record(rid, "blorp", tick)

@@ -1,0 +1,10 @@
+"""Known-good span emissions: a closed, legal lifecycle."""
+
+
+class Scheduler:
+    def step(self, trace, rid, tick):
+        trace.record(rid, "submit", tick, arrival=tick)
+        trace.record(rid, "admit", tick)
+        trace.record(rid, "prefill", tick)
+        trace.record(rid, "decode_chunk", tick, chunk=4)
+        trace.record(rid, "complete", tick, tokens=5)

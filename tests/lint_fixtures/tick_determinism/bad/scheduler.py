@@ -1,0 +1,20 @@
+"""Seeded violations for the tick-determinism rule (named scheduler.py so
+the step-path scope applies)."""
+import random
+import time
+
+
+class Scheduler:
+    def __init__(self):
+        self._draining = set()
+        self.started = time.time()      # __init__ is exempt: fine
+
+    def step(self):
+        now = time.time()               # BAD: wall clock in a step path
+        jitter = random.random()        # BAD: unseeded random draw
+        for slot in self._draining:     # BAD: unordered set iteration
+            pass
+        for slot in {1, 2, 3}:          # BAD: set literal iteration
+            pass
+        elapsed = time.perf_counter()   # BAD: not the t0/_s pattern
+        return now + jitter + elapsed

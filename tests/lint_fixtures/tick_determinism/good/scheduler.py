@@ -1,0 +1,18 @@
+"""Known-good step-path patterns the rule must pass."""
+import time
+
+
+class Scheduler:
+    def __init__(self):
+        self._draining = set()
+        self.decode_s = 0.0
+        self.tick = 0
+
+    def step(self):
+        # sanctioned reporting-only duration pattern
+        t0 = time.perf_counter()
+        for slot in sorted(self._draining):   # sorted: deterministic
+            pass
+        self.tick += 1
+        self.decode_s += time.perf_counter() - t0
+        return self.tick

@@ -23,9 +23,11 @@ from repro.orchestrator.obs import (
     itl_milliticks,
     merge_snapshots,
     recompute_registry,
+    snapshot_exemplar,
     snapshot_percentile,
     snapshot_total,
     validate_chrome_trace,
+    validate_span_log,
 )
 from repro.orchestrator.telemetry import latency_summary, nearest_rank
 
@@ -141,6 +143,105 @@ def test_merge_snapshots_and_snapshot_readers():
     assert snapshot_percentile(e.snapshot(), "h", 50) is None
 
 
+def test_merge_snapshots_mismatched_labels_and_empty_pods():
+    """The fleet rollup must tolerate pods that disagree on which label
+    sets (and which metrics) exist, and pods that report nothing at all --
+    a freshly-started replica snapshots as ``{}``-shaped sections."""
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("tok", replica="r0").inc(2)
+    b.counter("tok", replica="r1").inc(5)          # disjoint label sets
+    b.counter("only_b").inc(1)                     # metric a never saw
+    a.gauge("depth", pod="p0").set(3)
+    a.histogram("lat", width=1, n_buckets=8).record(4)
+    m = merge_snapshots([a.snapshot(), {}, b.snapshot(),
+                         MetricsRegistry().snapshot()])
+    assert m["counters"]["tok"] == {"replica=r0": 2, "replica=r1": 5}
+    assert snapshot_total(m, "tok") == 7
+    assert snapshot_total(m, "only_b") == 1
+    assert m["gauges"]["depth"]["pod=p0"]["value"] == 3
+    assert snapshot_percentile(m, "lat", 99) == 4
+    # order independence: the empty pods contribute nothing either way
+    m2 = merge_snapshots([{}, b.snapshot(), a.snapshot()])
+    assert json.dumps(m, sort_keys=True) == json.dumps(m2, sort_keys=True)
+
+
+def test_merge_snapshots_geometry_mismatch_raises():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.histogram("lat", width=1, n_buckets=8).record(1)
+    b.histogram("lat", width=2, n_buckets=8).record(1)
+    with pytest.raises(ValueError, match="geometry"):
+        merge_snapshots([a.snapshot(), b.snapshot()])
+
+
+# ---------------------------------------------------------------------------
+# exemplars: representative rid per histogram bucket
+# ---------------------------------------------------------------------------
+
+
+def test_exemplar_min_combine_is_order_independent():
+    """Each bucket keeps the SMALLEST rid seen, so record order (and
+    merge order) cannot perturb the snapshot -- the live-vs-recompute
+    bitwise match depends on this."""
+    h1 = Histogram(width=10, n_buckets=8)
+    h2 = Histogram(width=10, n_buckets=8)
+    for v, rid in [(5, 7), (5, 3), (25, 9)]:
+        h1.record(v, exemplar=rid)
+    for v, rid in [(25, 9), (5, 3), (5, 7)]:
+        h2.record(v, exemplar=rid)
+    assert h1.exemplars == h2.exemplars == {0: 3, 2: 9}
+    assert h1.snapshot() == h2.snapshot()
+    # merge min-combines too, in either direction
+    m1 = Histogram(width=10, n_buckets=8)
+    m1.record(5, exemplar=100)
+    m1.merge(h1)
+    m2 = Histogram(width=10, n_buckets=8)
+    m2.merge(h1)
+    m2.record(5, exemplar=100)
+    assert m1.exemplars == m2.exemplars == {0: 3, 2: 9}
+
+
+def test_exemplar_at_follows_nearest_rank_bucket():
+    h = Histogram(width=1, n_buckets=64)
+    for v in range(10):
+        h.record(v, exemplar=1000 + v)
+    assert h.exemplar_at(50) == 1004       # p50 -> sample 4's bucket
+    assert h.exemplar_at(99) == 1009       # p99 -> the slowest sample
+    assert Histogram(width=1, n_buckets=4).exemplar_at(99) is None
+    # a bucket recorded without an exemplar reads as None, not garbage
+    g = Histogram(width=1, n_buckets=4)
+    g.record(2)
+    assert g.percentile(99) == 2 and g.exemplar_at(99) is None
+
+
+def test_exemplar_snapshot_roundtrip_and_legacy_snapshots():
+    h = Histogram(width=2, n_buckets=8)
+    h.record(3, exemplar=42)
+    snap = h.snapshot()
+    assert snap["exemplars"] == {"1": 42}
+    rt = Histogram.from_snapshot(snap)
+    assert rt.exemplars == {1: 42} and rt.snapshot() == snap
+    # pre-exemplar state files lack the key entirely: still loadable
+    legacy = dict(snap)
+    del legacy["exemplars"]
+    assert Histogram.from_snapshot(legacy).exemplars == {}
+
+
+def test_snapshot_exemplar_merges_across_labels():
+    r = MetricsRegistry()
+    r.histogram("lat", width=1, n_buckets=32,
+                replica="r0").record(4, exemplar=11)
+    r.histogram("lat", width=1, n_buckets=32,
+                replica="r1").record(20, exemplar=77)
+    snap = r.snapshot()
+    assert snapshot_percentile(snap, "lat", 99) == 20
+    assert snapshot_exemplar(snap, "lat", 99) == 77
+    assert snapshot_exemplar(snap, "lat", 50) == 11
+    assert snapshot_exemplar(snap, "nope", 99) is None
+    e = MetricsRegistry()
+    e.histogram("lat", width=1, n_buckets=32)      # registered, no samples
+    assert snapshot_exemplar(e.snapshot(), "lat", 99) is None
+
+
 def test_latency_summary_carries_count():
     """nearest_rank returns 0 for empty input -- the count disambiguates a
     true 0-tick latency from 'no samples' (renderers print '-')."""
@@ -182,13 +283,54 @@ def _synthetic_buffer():
 def test_trace_buffer_ring_and_validation():
     t = TraceBuffer(capacity=3)
     with pytest.raises(ValueError):
-        t.record(0, "not-a-kind", 0)
+        # deliberately bad kind: proves TraceBuffer rejects it at runtime
+        t.record(0, "not-a-kind", 0)  # repro: lint-ok[span-lifecycle]
     for i in range(5):
         t.record(i, "submit", i)
     assert t.recorded == 5 and len(t.events()) == 3 and t.dropped == 2
     assert [e.rid for e in t.events()] == [2, 3, 4]
     t.clear()
     assert t.recorded == 0 and t.status()["buffered"] == 0
+
+
+def test_validate_span_log_accepts_legal_lifecycles():
+    stats = validate_span_log([_synthetic_buffer()])
+    assert stats == {"buffers": 1, "requests": 2, "events": 7}
+    assert validate_span_log([]) == {"buffers": 0, "requests": 0,
+                                     "events": 0}
+
+
+def test_validate_span_log_rejects_illegal_transitions():
+    # complete straight after submit: prefill/decode_chunk never happened
+    t = TraceBuffer(name="pod-x")
+    t.record(0, "submit", 0)
+    t.record(0, "complete", 1, tokens=1, reason="length")
+    with pytest.raises(ValueError, match="illegal transition"):
+        validate_span_log([t])
+    # nothing may follow a terminal span
+    t = _synthetic_buffer()
+    t.record(0, "decode_chunk", 9, replica="r0", slot=0, chunk=1)
+    with pytest.raises(ValueError, match="after terminal"):
+        validate_span_log([t])
+    # a log may not START mid-lifecycle...
+    t = TraceBuffer(name="pod-x")
+    t.record(0, "decode_chunk", 0, replica="r0", slot=0, chunk=1)
+    with pytest.raises(ValueError, match="starts with"):
+        validate_span_log([t])
+    # ...unless the ring dropped events (the true start fell off)
+    t = TraceBuffer(name="pod-x", capacity=2)
+    t.record(0, "submit", 0, arrival=0)
+    t.record(0, "admit", 1, replica="r0", slot=0)
+    t.record(0, "prefill", 1, replica="r0", slot=0, positions=4, bucket=8,
+             pages=0, prefix_hit=False)
+    assert t.dropped == 1
+    assert validate_span_log([t])["events"] == 2
+    # ticks must be monotone within a request
+    t = TraceBuffer(name="pod-x")
+    t.record(0, "submit", 5, arrival=5)
+    t.record(0, "admit", 3, replica="r0", slot=0)
+    with pytest.raises(ValueError, match="backwards"):
+        validate_span_log([t])
 
 
 def test_export_chrome_valid_and_validator_catches_corruption(tmp_path):
@@ -353,12 +495,22 @@ def test_span_lifecycle_invariants_and_recompute_match(rt):
         assert adm.attr("slot") is not None
     assert [e.name for e in per_req[giant.rid]] == ["submit", "reject"]
 
-    # the determinism check: recompute the registry from spans alone
+    # the served trace replays clean against the span state machine
+    stats = validate_span_log([pod.trace])
+    assert stats["requests"] == len(reqs) + 1
+
+    # the determinism check: recompute the registry from spans alone.
+    # snapshots now carry per-bucket exemplar rids, so this equality also
+    # proves the live path (req.rid at completion) and the replay path
+    # (lifecycle rid) pick identical exemplars.
     live = completion_snapshot(pod.metrics.snapshot())
     rec = completion_snapshot(recompute_registry([pod.trace]).snapshot())
     assert live == rec
     assert live["counters"]["requests_completed"] == len(reqs)
     assert live["counters"]["requests_rejected"] == 1
+    # the p99 exemplar names a real completed request
+    p99_rid = snapshot_exemplar(pod.metrics.snapshot(), "latency_ticks", 99)
+    assert p99_rid in {r.rid for r in reqs}
 
 
 @pytest.mark.orchestrator
@@ -466,8 +618,10 @@ def test_top_renders_live_metrics(rt):
     with redirect_stdout(io.StringIO()) as buf:
         assert cli_main(["--root", str(rt.root), "top"]) == 0
     out = buf.getvalue()
-    assert "QUEUE" in out and "TTFT" in out
+    assert "QUEUE" in out and "TTFT" in out and "P99-RID" in out
     line = next(ln for ln in out.splitlines() if ln.startswith(pod.pod_id))
+    # the exemplar column names one of the rids this fleet actually served
+    assert any(tok.isdigit() and int(tok) < 6 for tok in line.split())
     assert "/" in line          # pool occupancy + latency percentiles
     assert " -" not in line.split(pod.pod_id)[1][:20] or True
 

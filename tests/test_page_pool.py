@@ -30,10 +30,11 @@ def _block(rng, n):
 # ---------------------------------------------------------------------------
 
 def test_random_share_cow_schedules_conserve_pages():
-    """800 random admit(miss)/admit(hit)/extend/COW/release/promote steps:
-    pages are conserved across the free-list, private ownership and the
-    prefix index; ``check()`` asserts the invariants after every op; after
-    releasing every slot and dropping the index the pool is fully drained."""
+    """800 random admit(miss)/admit(hit)/extend/COW/release/promote/pause
+    steps: pages are conserved across the free-list, private ownership and
+    the prefix index; ``check()`` asserts the invariants after every op;
+    after releasing every slot and dropping the index the pool is fully
+    drained."""
     rng = np.random.default_rng(0)
     ps = 8
     pool = PagePool(n_pages=41, page_size=ps, n_slots=6, max_pages=16)
@@ -43,7 +44,7 @@ def test_random_share_cow_schedules_conserve_pages():
     blocks = {d: _block(rng, ps * (1 + i % 3)) for i, d in enumerate(digests)}
 
     for _ in range(800):
-        op = rng.integers(0, 5)
+        op = rng.integers(0, 6)
         busy = list(hi)
         free_slots = [s for s in range(6) if s not in hi]
         if op == 0 and free_slots:              # admit, maybe via the cache
@@ -88,6 +89,15 @@ def test_random_share_cow_schedules_conserve_pages():
         elif op == 4:                           # cold lookups never mutate
             d = str(rng.choice(digests))
             pool.lookup(d, blocks[d])
+        elif op == 5 and busy:                  # page-level preemption
+            slot = int(rng.choice(busy))
+            pool.pause(slot)
+            # a paused slot holds nothing until its resume re-reserves
+            # (a later admit on the slot clears the mark via reserve)
+            assert slot in pool.paused
+            assert not pool.owned[slot] and not pool.shared[slot]
+            assert pool.reserved[slot] == 0
+            del hi[slot], goal[slot]
         pool.check()
 
     for slot in list(hi):

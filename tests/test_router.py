@@ -158,13 +158,17 @@ def test_spillover_before_reject(rt):
         small = Pod(rt, "stable", replicas=1, n_slots=2, max_len=24)
         big = Pod(rt, "stable", replicas=1, n_slots=2, max_len=96)
         router = PodRouter([small, big], policy=policy)
-        # long requests: span 20+20+chunk > 24, fits 96. Probe many rids so
-        # at least one hashes to the small pod under consistent-hash.
-        longs = [GenRequest(rid=i, prompt=np.arange(1, 21),
-                            max_new_tokens=20) for i in range(10)]
-        prefer_small = [r for r in longs
-                        if router._candidates(r)[0] is small]
+        # long requests: span 20+20+chunk > 24, fits 96. Pod ids are
+        # uuid4-random, so a short fixed rid range can (rarely) hash
+        # every probe to the big pod under consistent-hash: probe widely
+        # (placement-only, cheap), then SERVE just a few of each kind.
+        probes = [GenRequest(rid=i, prompt=np.arange(1, 21),
+                             max_new_tokens=20) for i in range(64)]
+        prefer_small = [r for r in probes
+                        if router._candidates(r)[0] is small][:5]
         assert prefer_small, "no probe preferred the small pod"
+        longs = prefer_small + [r for r in probes
+                                if router._candidates(r)[0] is big][:5]
         router.submit(longs)
         assert all(r.pod == big.pod_id for r in longs)
         assert all(r.spilled for r in prefer_small)
