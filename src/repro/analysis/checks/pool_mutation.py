@@ -1,11 +1,12 @@
 """pool-mutation: PagePool internals have one owner.
 
-PagePool's refcount/free-list bookkeeping (``free``, ``table``,
-``owned``, ``shared``, ``reserved``, ``refcount``, ``prefix``,
-``paused``, ``_clock``) is kept consistent by its own methods plus the
-``check()`` invariant sweep. A scheduler that pokes ``pool.refcount``
-directly bypasses both, and the corruption only surfaces ticks later as
-a double-free or a leaked page. Two sub-rules:
+PagePool's refcount/free-list/registry bookkeeping (``free``, ``table``,
+``owned``, ``shared``, ``reserved``, ``refcount``, ``radix``, ``store``,
+``events``, ``_pinned``, ``paused``, ``_clock``) is kept consistent by
+its own methods plus the ``check()`` invariant sweep. A scheduler that
+pokes ``pool.refcount`` -- or reaches into the radix tree or the spill
+store -- directly bypasses both, and the corruption only surfaces ticks
+later as a double-free or a leaked page. Two sub-rules:
 
 * outside ``page_pool.py``, no store/del/augmented-assign to a pool
   internal and no mutating container method (``append``, ``pop``,
@@ -30,7 +31,8 @@ TESTS_REL = "tests/test_page_pool.py"
 # bookkeeping attributes; intersected with what PagePool.__init__ actually
 # assigns so renames don't leave the check pinned to stale names
 INTERNAL_CANDIDATES = {"free", "table", "owned", "shared", "reserved",
-                       "refcount", "prefix", "paused", "_clock"}
+                       "refcount", "radix", "store", "events", "_pinned",
+                       "paused", "_clock"}
 MUTATORS = {"append", "extend", "insert", "remove", "pop", "popleft",
             "clear", "add", "discard", "update", "setdefault", "sort"}
 

@@ -10,8 +10,10 @@ functions of (tick, queue contents, pool state). Wall-clock reads,
 runs (or the live run and its recompute) diverge.
 
 Scope: files named like orchestrator step modules (``scheduler.py``,
-``router.py``, ``request_queue.py``, ``pod.py``), every function except
-``__init__`` (construction may seed ids and wall-clock offsets; steps
+``router.py``, ``request_queue.py``, ``pod.py``, ``page_pool.py``,
+``prefix_registry.py`` -- the pool's eviction order and the radix walk
+feed admission decisions, so they are step paths too), every function
+except ``__init__`` (construction may seed ids and wall-clock offsets; steps
 may not). Allowed escape hatch: ``time.perf_counter()`` assigned to a
 ``t0``-style local or accumulated into a ``*_s`` attribute -- that is
 the sanctioned *reporting-only* duration pattern (never fed back into
@@ -26,7 +28,7 @@ import re
 from repro.analysis.core import Check, Finding
 
 SCOPE_BASENAMES = {"scheduler.py", "router.py", "request_queue.py",
-                   "pod.py"}
+                   "pod.py", "page_pool.py", "prefix_registry.py"}
 
 _BANNED_CALLS = {
     "time.time", "time.monotonic", "time.monotonic_ns", "time.time_ns",

@@ -18,6 +18,12 @@ Conventions:
 * **Baseline** -- ``--baseline findings.json`` filters out previously
   recorded findings (``--write-baseline`` records the current set), so the
   suite can land on a tree with known debt and only fail on NEW findings.
+* **Ratchet** -- ``--ratchet ratchet.json`` fails the run when the number
+  of ``lint-ok`` suppressions GREW past the committed count
+  (``--write-ratchet`` records it). Baselines grandfather old findings;
+  the ratchet stops new debt from hiding behind suppression comments --
+  CI gates on both, so the only way to add a suppression is to commit the
+  updated ratchet file in the same change, where review sees it.
 * **Scope** -- checks see a :class:`Project` (every scanned file, parsed
   once) so cross-file rules (is ``PagePool.pause`` exercised by the
   property tests?) read both sides. Files outside the lint scope that a
@@ -260,6 +266,16 @@ def load_baseline(path: str) -> set[str]:
     return set(data.get("findings", []))
 
 
+def load_ratchet(path: str) -> int:
+    data = json.loads(Path(path).read_text())
+    return int(data.get("suppressions", 0))
+
+
+def write_ratchet(path: str, result: LintResult) -> None:
+    Path(path).write_text(json.dumps(
+        {"version": 1, "suppressions": result.suppressed}, indent=1) + "\n")
+
+
 def write_baseline(path: str, result: LintResult) -> None:
     Path(path).write_text(json.dumps(
         {"version": 1,
@@ -281,6 +297,12 @@ def main(argv=None) -> int:
                     help="ignore findings recorded in this baseline file")
     ap.add_argument("--write-baseline", default=None, metavar="FILE",
                     help="record the current findings as the baseline")
+    ap.add_argument("--ratchet", default=None, metavar="FILE",
+                    help="fail when lint-ok suppressions exceed the count "
+                         "committed in FILE (the suppression ratchet)")
+    ap.add_argument("--write-ratchet", default=None, metavar="FILE",
+                    help="record the current suppression count as the "
+                         "ratchet baseline")
     ap.add_argument("--list-rules", action="store_true",
                     help="list rule ids and exit")
     args = ap.parse_args(argv)
@@ -302,6 +324,11 @@ def main(argv=None) -> int:
         print(f"wrote {len(result.findings)} finding(s) to "
               f"{args.write_baseline}")
         return 0
+    if args.write_ratchet:
+        write_ratchet(args.write_ratchet, result)
+        print(f"wrote suppression count {result.suppressed} to "
+              f"{args.write_ratchet}")
+        return 0
     for f in result.findings:
         print(f.render())
     extras = []
@@ -314,4 +341,21 @@ def main(argv=None) -> int:
           f"{result.warnings} warning(s) across {result.files} "
           f"file(s){tail}")
     failing = result.errors + (result.warnings if args.strict else 0)
+    if args.ratchet:
+        try:
+            allowed = load_ratchet(args.ratchet)
+        except (OSError, json.JSONDecodeError, ValueError) as e:
+            print(f"repro lint: cannot read ratchet {args.ratchet}: {e}",
+                  file=sys.stderr)
+            return 2
+        if result.suppressed > allowed:
+            print(f"repro lint: suppression ratchet FAILED -- "
+                  f"{result.suppressed} lint-ok marker(s), baseline "
+                  f"allows {allowed}; fix the finding or commit an "
+                  f"updated ratchet (--write-ratchet {args.ratchet})")
+            failing += 1
+        elif result.suppressed < allowed:
+            print(f"repro lint: suppressions dropped to "
+                  f"{result.suppressed} (baseline {allowed}) -- tighten "
+                  f"the ratchet with --write-ratchet {args.ratchet}")
     return 1 if failing else 0

@@ -121,9 +121,17 @@ def cmd_ps(rt: Runtime, args) -> int:
             # prefix page cache (paged pods with --prefix-cache): hit/miss
             # + resident shared pages, summed over replicas
             pcs = [r["prefix_cache"] for r in reps if r.get("prefix_cache")]
+            # radix registry: node/depth shape plus the spill tier's
+            # traffic (pages currently in host RAM, spill/restore count)
+            depth = max((c.get("max_depth", 0) for c in pcs), default=0)
             prefix = (f" phits={sum(c['hits'] for c in pcs)}"
                       f"/{sum(c['misses'] for c in pcs)}"
                       f" shared={sum(c['shared_pages'] for c in pcs)}"
+                      f" radix={sum(c.get('nodes', 0) for c in pcs)}n"
+                      f":{depth}d"
+                      f" spilled={sum(c.get('spilled_pages', 0) for c in pcs)}"
+                      f" sp/rs={sum(c.get('spills', 0) for c in pcs)}"
+                      f"/{sum(c.get('restores', 0) for c in pcs)}"
                       if pcs else "")
             wasted = sum(r.get("tokens_wasted", 0) for r in reps)
             preempts = sum(r.get("preemptions", 0) for r in reps)
@@ -178,6 +186,8 @@ def cmd_serve(rt: Runtime, args) -> int:
         argv += ["--prefix-cache"]
     if args.shared_prefix:
         argv += ["--shared-prefix", str(args.shared_prefix)]
+    if args.spill_pages:
+        argv += ["--spill-pages", str(args.spill_pages)]
     if args.batch_every:
         argv += ["--batch-every", str(args.batch_every)]
     if args.deadline_ticks is not None:
@@ -211,7 +221,8 @@ def cmd_top(rt: Runtime, args) -> int:
         pods_dir = rt.root / "pods"
         files = sorted(pods_dir.glob("*.json")) if pods_dir.exists() else []
         print(f"{'NAME':26s} {'PHASE':8s} {'QUEUE':>5s} {'POOL':>9s} "
-              f"{'PREFIX':>7s} {'WASTED':>6s} {'PREEMPT':>7s} {'SHED':>5s} "
+              f"{'PREFIX':>7s} {'SP/RS':>7s} {'WASTED':>6s} "
+              f"{'PREEMPT':>7s} {'SHED':>5s} "
               f"{'TOKENS':>7s} "
               f"{'P50/P99':>9s} {'TTFT':>9s} {'ITL':>11s} {'P99-RID':>7s}")
         shown = 0
@@ -237,6 +248,10 @@ def cmd_top(rt: Runtime, args) -> int:
             hits = snapshot_total(snap, "prefix_hits")
             misses = snapshot_total(snap, "prefix_misses")
             rate = (f"{hits / (hits + misses):.0%}" if hits + misses else "-")
+            # spill-tier traffic: pages pushed to / pulled from host RAM
+            spills = snapshot_total(snap, "pool_spills")
+            restores = snapshot_total(snap, "pool_restores")
+            sprs = f"{spills}/{restores}" if spills or restores else "-"
             lat = (f"{pct(snap, 'latency_ticks', 50)}"
                    f"/{pct(snap, 'latency_ticks', 99)}"
                    if snapshot_count(snap, "latency_ticks") else "-")
@@ -252,7 +267,8 @@ def cmd_top(rt: Runtime, args) -> int:
             p99_rid = snapshot_exemplar(snap, "latency_ticks", 99)
             p99_rid = "-" if p99_rid is None else str(p99_rid)
             print(f"{name:26s} {phase:8s} {queue:>5d} {pool:>9s} "
-                  f"{rate:>7s} {snapshot_total(snap, 'tokens_wasted'):>6d} "
+                  f"{rate:>7s} {sprs:>7s} "
+                  f"{snapshot_total(snap, 'tokens_wasted'):>6d} "
                   f"{snapshot_total(snap, 'preemptions'):>7d} "
                   f"{snapshot_total(snap, 'requests_shed'):>5d} "
                   f"{snapshot_total(snap, 'tokens_out'):>7d} "
@@ -345,6 +361,10 @@ def main(argv=None) -> int:
     p.add_argument("--page-size", type=int, default=16)
     p.add_argument("--prefix-cache", action="store_true",
                    help="copy-on-write prefix page sharing (implies --paged)")
+    p.add_argument("--spill-pages", type=int, default=0,
+                   help="host-RAM spill tier for evicted prefix pages: "
+                        "0 disables, -1 is unbounded, N caps the store "
+                        "(needs --prefix-cache)")
     p.add_argument("--shared-prefix", type=int, default=0,
                    help="prepend an N-token shared system prompt to the "
                         "trace")

@@ -450,15 +450,19 @@ class Container:
             toks = jax.ShapeDtypeStruct((1, prompt_len), tok)
             length = jax.ShapeDtypeStruct((), tok)
             if pfx:
-                # prefix-cache hit: suffix-only prefill reading the cached
-                # prefix pages straight out of the live pool (undonated)
-                np_ = -(-prompt_len // page_size)
+                # prefix-registry hit: suffix-only prefill reading the
+                # matched chain's pages straight out of the live pool
+                # (undonated). pfx may end mid-page (radix partial match):
+                # the page list rounds UP to cover the boundary page, and
+                # the output cache covers the merged front-partial rows too
+                frac = pfx % page_size
+                np_ = -(-(frac + prompt_len) // page_size)
                 cache_sh = self._cache_shardings(
                     self.model.paged_cache_defs(np_, page_size,
                                                 self.cache_dtype))
                 pool = self.paged_cache_specs(n_pages, page_size)
                 pool_sh = self.paged_cache_shardings(n_pages, page_size)
-                pages = jax.ShapeDtypeStruct((pfx // page_size,), tok)
+                pages = jax.ShapeDtypeStruct((-(-pfx // page_size),), tok)
                 jitted = jax.jit(
                     fn,
                     in_shardings=(pspec, pool_sh,

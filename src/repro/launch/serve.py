@@ -119,7 +119,8 @@ def _make_pod(rt: Runtime, image, args, cfg):
                    max_len=2 * max_len, platform=args.platform,
                    seed=args.seed, paged=True, page_size=args.page_size,
                    n_pages=args.slots * (-(-max_len // args.page_size)) + 1,
-                   prefix_cache=bool(getattr(args, "prefix_cache", False)))
+                   prefix_cache=bool(getattr(args, "prefix_cache", False)),
+                   spill_pages=getattr(args, "spill_pages", 0))
     return Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
                max_len=max_len, platform=args.platform, seed=args.seed)
 
@@ -177,6 +178,13 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
             "hits": sum(e.prefix_hits for e in engines),
             "misses": sum(e.prefix_misses for e in engines),
             "tokens_saved": sum(e.prefix_tokens_saved for e in engines),
+            # radix-registry taxonomy + spill-tier traffic
+            "ancestor_hits": sum(e.prefix_ancestor_hits for e in engines),
+            "partial_hits": sum(e.prefix_partial_hits for e in engines),
+            "spills": sum(e.pool.spills for e in engines
+                          if getattr(e, "paged", False)),
+            "restores": sum(e.pool.restores for e in engines
+                            if getattr(e, "paged", False)),
         },
         "tokens_wasted": sum(e.tokens_wasted for e in engines),
         # QoS accounting: page-level preemptions/resumes on the engines,
@@ -231,8 +239,13 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
               f"p99 {d['itl_p99_ticks']:.2f} ticks/tok")
     pc = out["prefix_cache"]
     if pc["enabled"]:
-        print(f"[serve] prefix cache: {pc['hits']} hits / {pc['misses']} "
-              f"misses, {pc['tokens_saved']} prefill tokens skipped")
+        print(f"[serve] prefix cache: {pc['hits']} hits "
+              f"({pc['ancestor_hits']} ancestor, {pc['partial_hits']} "
+              f"partial) / {pc['misses']} misses, "
+              f"{pc['tokens_saved']} prefill tokens skipped")
+        if pc["spills"] or pc["restores"]:
+            print(f"[serve] spill tier: {pc['spills']} spills / "
+                  f"{pc['restores']} restores")
     if out["preemptions"] or out["shed"]:
         print(f"[serve] qos: {out['preemptions']} preemptions / "
               f"{out['resumes']} resumes, {out['shed']} shed")
@@ -353,6 +366,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--prefix-cache", action="store_true",
                     help="copy-on-write prefix page sharing for requests "
                          "declaring a shared leading block (implies --paged)")
+    ap.add_argument("--spill-pages", type=int, default=0,
+                    help="host-RAM spill tier for evicted prefix pages: "
+                         "0 disables, -1 is unbounded, N caps the store at "
+                         "N pages (requires --prefix-cache)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend one fixed N-token system prompt to every "
                          "request (the shared-prefix trace)")
@@ -378,6 +395,12 @@ def main(argv=None) -> dict:
     args = ap.parse_args(argv)
     if args.prefix_cache:
         args.paged = True           # prefix sharing is page-granular
+    if args.spill_pages:
+        if not args.prefix_cache:
+            ap.error("--spill-pages requires --prefix-cache (the spill "
+                     "tier holds evicted prefix-registry pages)")
+        if args.spill_pages < 0:
+            args.spill_pages = None     # unbounded host store
     if args.mode == "static" and args.pods > 1:
         # never let a "static fleet" silently serve from one host: the
         # static baseline has no router tier, and comparing it against an

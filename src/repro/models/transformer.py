@@ -243,7 +243,9 @@ class Model:
         suffix of a prompt whose first ``prefix_len`` positions already sit
         in the paged pool ``prefix_kv`` (the per-stage paged_cache_defs
         tree) at the physical pages listed in ``prefix_pages``
-        ((prefix_len / page_size,) int32). Token positions are offset past
+        ((ceil(prefix_len / page_size),) int32 -- the last page may be only
+        partially covered when the shared prefix ends mid-page; positions
+        past ``prefix_len`` are sliced off). Token positions are offset past
         the prefix (RoPE included) and every attention block gathers the
         prefix pages and attends over [prefix, suffix]; the collected cache
         covers the SUFFIX positions only. Full-attention archs only --
@@ -345,12 +347,15 @@ class Model:
                 # gather the cached prefix pages (n_kv, kp, ps, hd) into a
                 # contiguous (B, prefix_len, n_kv, hd) history ahead of the
                 # suffix KV; kv positions run 0..prefix_len+S-1 while the q
-                # positions stay offset past the prefix
+                # positions stay offset past the prefix. prefix_len may end
+                # MID-page (radix partial match): the last page is gathered
+                # whole and the tail positions past prefix_len sliced off
                 B, S = k.shape[0], k.shape[1]
                 def _gather(pool):
                     n_kv, _, ps_, hd = pool.shape
                     pg = jnp.take(pool, prefix_pages, axis=1)
-                    pg = pg.reshape(n_kv, prefix_len, hd).transpose(1, 0, 2)
+                    pg = pg.reshape(n_kv, -1, hd)[:, :prefix_len]
+                    pg = pg.transpose(1, 0, 2)
                     return jnp.broadcast_to(pg[None], (B, prefix_len, n_kv, hd))
                 k_all = jnp.concatenate(
                     [_gather(prefix_kv["k"]).astype(k.dtype), k], axis=1)

@@ -33,7 +33,8 @@ from dataclasses import dataclass
 from pathlib import Path
 
 SPAN_KINDS = ("submit", "route", "queue", "admit", "reject", "shed",
-              "prefill", "decode_chunk", "preempt", "resume", "complete")
+              "prefill", "decode_chunk", "preempt", "resume", "complete",
+              "spill", "restore")
 
 # The lifecycle state machine as data: kind -> legal predecessors within
 # one (buffer, rid) span log. ``None`` means the kind may start a log:
@@ -49,11 +50,20 @@ SPAN_TRANSITIONS = {
     "admit": ("submit", "queue"),
     "reject": (None, "submit", "queue", "preempt"),
     "shed": (None, "submit", "queue", "preempt"),
-    "prefill": ("admit", "resume"),
-    "decode_chunk": ("prefill", "decode_chunk"),
+    "prefill": ("admit", "resume", "spill", "restore"),
+    "decode_chunk": ("prefill", "decode_chunk", "spill"),
     "preempt": ("prefill", "decode_chunk"),
     "resume": ("preempt",),
     "complete": ("prefill", "decode_chunk"),
+    # spill-tier movements of the prefix registry, attributed to the
+    # request whose allocation/share triggered them: spills fire under any
+    # pool pressure (admission prefill or decode alloc-on-write -- the
+    # latter lands after the request's own prefill/decode spans), restores
+    # only while mapping a matched chain (between admit/resume and the
+    # suffix prefill)
+    "spill": ("admit", "resume", "prefill", "decode_chunk", "spill",
+              "restore"),
+    "restore": ("admit", "resume", "spill", "restore"),
 }
 
 # kinds with no successors: once recorded, the (buffer, rid) log is closed
@@ -200,7 +210,8 @@ def export_chrome(buffers, path: str | Path | None = None) -> dict:
     * ``paused``  : preempt -> resume (pages released, request queued)
     * ``generate``: admit -> complete envelope (tokens attr)
     * ``route`` / ``reject`` / ``shed`` / ``preempt`` / ``resume`` /
-      ``complete``: instants
+      ``complete`` / ``spill`` / ``restore``: instants (the last two are
+      the prefix registry's tier movements, digest attr)
     """
     events = []
     for pid, buf in enumerate(buffers):
@@ -248,6 +259,12 @@ def export_chrome(buffers, path: str | Path | None = None) -> dict:
                     events.append(_x("decode", e.tick,
                                      int(e.attr("chunk", 1)), pid, tid, rid,
                                      slot=e.attr("slot")))
+                elif e.name == "spill":
+                    events.append(_i("spill", e.tick, pid, tid, rid,
+                                     **dict(e.attrs)))
+                elif e.name == "restore":
+                    events.append(_i("restore", e.tick, pid, tid, rid,
+                                     **dict(e.attrs)))
                 elif e.name == "reject":
                     if baseline is not None:
                         events.append(_x("queue", baseline,

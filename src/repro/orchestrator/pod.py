@@ -31,7 +31,8 @@ class Pod:
                  seed: int = 0, eos_id: int | None = None,
                  decode_chunk: int = 4, paged: bool = False,
                  page_size: int = 16, n_pages: int | None = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 spill_pages: int | None = 0):
         if replicas < 1:
             raise ValueError("a Pod needs at least one replica")
         self.runtime = runtime
@@ -51,8 +52,11 @@ class Pod:
         self.page_size = int(page_size)
         self.n_pages = n_pages
         # copy-on-write prefix page sharing (paged only): each replica's
-        # pool keeps a digest-keyed index of shared prompt-prefix pages
+        # pool keeps a radix tree of shared prompt-prefix page blocks
         self.prefix_cache = bool(prefix_cache)
+        # host-RAM spill tier for evicted prefix nodes: 0 disables (evict
+        # outright), None is an unbounded store, >0 caps the store's pages
+        self.spill_pages = spill_pages
         self.pod_id = f"pod-{uuid.uuid4().hex[:8]}"
         # one metrics registry + one span ring buffer per pod, shared by
         # every replica engine (labels keep the per-replica breakdown);
@@ -93,6 +97,7 @@ class Pod:
                           paged=self.paged, page_size=self.page_size,
                           n_pages=self.n_pages,
                           prefix_cache=self.prefix_cache,
+                          spill_pages=self.spill_pages,
                           metrics=self.metrics, trace=self.trace)
 
     def drop_params(self, image_digest: str) -> None:

@@ -16,14 +16,17 @@ Placement is pluggable:
   nodes (session affinity). The ring never mutates: draining a pod just
   makes the walk skip it, so ONLY the drained pod's keys move (to their
   ring successors) and they return home when it un-drains.
-* ``prefix-hash``: same ring, but the key is the request's PROMPT-PREFIX
-  digest (``GenRequest.prefix_digest``) when it has one, falling back to
-  the rid hash otherwise. Requests sharing a system prompt then land on
-  the pod whose paged pool already holds the copy-on-write prefix pages
-  (see PagePool.cache_prefix) -- prefix-cache affinity. Draining behaves
-  like consistent-hash: a drained pod's digests move to the ring
-  successor, whose pool re-materializes them on first miss, and they
-  return home on undrain.
+* ``prefix-hash``: same ring, but the key is the request's prefix FAMILY
+  anchor. The declared prefix is chunked into the same chained block
+  digests the radix registry (``PrefixRadix``) uses; the router keeps a
+  digest -> anchor map and routes on the deepest already-seen ancestor,
+  so "system prompt" and "system prompt + few-shot variant k" all hash
+  to one pod and share ancestor pages there instead of scattering
+  per-variant. Falls back to the legacy whole-prefix digest
+  (``GenRequest.prefix_digest``), then to the rid hash. Draining behaves
+  like consistent-hash: a drained pod's anchors move to the ring
+  successor, whose registry re-materializes the family on first miss,
+  and they return home on undrain.
 
 Both policies spill before they reject: if no engine in the preferred pod
 can EVER fit a request (slab / page-table span / pool / frontend
@@ -55,6 +58,7 @@ from typing import Iterable
 from repro.orchestrator.obs.metrics import MetricsRegistry, merge_snapshots
 from repro.orchestrator.obs.tracing import TraceBuffer
 from repro.orchestrator.pod import Pod
+from repro.orchestrator.prefix_registry import block_digests
 from repro.orchestrator.request_queue import GenRequest
 from repro.orchestrator.scheduler import ContinuousScheduler
 
@@ -124,6 +128,17 @@ class PodRouter:
         self._c_req_rejected = self.metrics.counter("requests_rejected")
         self._c_shed = self.metrics.counter("shed", policy=policy)
         self._c_req_shed = self.metrics.counter("requests_shed")
+        # prefix-hash family anchors: chained block digest -> the digest
+        # the whole FAMILY routes on. The radix registry shares ancestor
+        # pages across prefix variants, so per-variant digests must not
+        # scatter a family across pods -- every chain member maps to the
+        # anchor of the first family it overlaps (deepest registered
+        # ancestor at first sight). Grows with distinct prefix blocks seen;
+        # host-side bookkeeping only.
+        self._family_anchor: dict[str, str] = {}
+        self._page_size = next(
+            (e.page_size for p in self.pods for e in p.engines
+             if getattr(e, "paged", False)), None)
         # incremental outstanding-work ledger (tokens committed, not yet
         # finished) so shortest-queue placement is O(P log P) per request
         # instead of rescanning every queue and slot bank
@@ -165,6 +180,37 @@ class PodRouter:
     def scheduler_for(self, pod: Pod) -> ContinuousScheduler:
         return self._sched[pod.pod_id]
 
+    def _prefix_key(self, req: GenRequest) -> str:
+        """Ring key for prefix-hash placement: the DEEPEST already-seen
+        ancestor's family anchor. A request's declared prefix is chunked
+        into chained block digests (the same addressing the radix registry
+        uses); if any of them was seen before, the request adopts that
+        family's anchor -- so "system prompt" and "system prompt +
+        few-shot" land on the same pod and the radix can share the
+        ancestor pages. A brand-new family anchors on its own deepest
+        digest. Requests with no usable prefix fall back to the legacy
+        whole-prefix digest, then to rid session affinity."""
+        chain: list[str] = []
+        if self._page_size is not None and req.prefix_len \
+                and req.frontend is None:
+            cap = min(req.prefix_len, req.prompt_len - 1)
+            if cap >= 1:
+                chain = block_digests(req.prompt[:cap], self._page_size)
+        if not chain:
+            return (f"px:{req.prefix_digest}" if req.prefix_digest
+                    else f"rid:{req.rid}")
+        anchor = None
+        for d in reversed(chain):
+            a = self._family_anchor.get(d)
+            if a is not None:
+                anchor = a
+                break
+        if anchor is None:
+            anchor = chain[-1]
+        for d in chain:
+            self._family_anchor.setdefault(d, anchor)
+        return f"px:{anchor}"
+
     def _candidates(self, req: GenRequest) -> list[Pod]:
         """Every pod in placement-preference order for ``req``: live pods
         by policy first, draining pods as a LAST resort -- a request
@@ -172,12 +218,11 @@ class PodRouter:
         upgrade) waits in its queue rather than being terminally rejected.
         The first entry is the policy's choice; the rest spill over."""
         if self.policy in ("consistent-hash", "prefix-hash"):
-            # prefix-hash: place on the shared-prefix digest so every
-            # request with the same system prompt walks to the pod whose
-            # pool holds (or will fill) those prefix pages; digest-less
-            # requests degrade to plain rid session affinity
-            key = (f"px:{req.prefix_digest}"
-                   if self.policy == "prefix-hash" and req.prefix_digest
+            # prefix-hash: place on the request's FAMILY ANCHOR digest so
+            # every prefix variant sharing any radix ancestor walks to the
+            # pod whose pool holds those chain pages; digest-less requests
+            # degrade to plain rid session affinity
+            key = (self._prefix_key(req) if self.policy == "prefix-hash"
                    else f"rid:{req.rid}")
             i = bisect.bisect_right(self._ring_keys, _hash64(key))
             order, seen = [], set()

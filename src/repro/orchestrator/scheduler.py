@@ -29,6 +29,7 @@ from repro.orchestrator.obs.report import (ITL_HIST, TICK_HIST,
                                            observe_completion)
 from repro.orchestrator.obs.tracing import TraceBuffer
 from repro.orchestrator.page_pool import PagePool
+from repro.orchestrator.prefix_registry import PrefixMatch
 from repro.orchestrator.request_queue import GenRequest, RequestQueue
 
 _PREFILL_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
@@ -54,11 +55,21 @@ def _insert_pages(big, small, row):
     return jax.tree.map(leaf, big, small)
 
 
+def _gather_pages(big, rows):
+    """Copy the pool pages at ``rows`` OUT of the live cache (the spill
+    save path). Read-only: the cache is not donated -- the caller syncs the
+    result to host and the buffer stays live for the next dispatch."""
+    def leaf(b):
+        return jnp.take(b, rows, axis=2)
+    return jax.tree.map(leaf, big)
+
+
 # jitted ONCE at module level: jax's trace cache keys on function identity,
 # so a per-engine jit wrapper would re-trace the full-cache update for every
 # replica and every blue/green rollover
 _insert_slot_jit = jax.jit(_insert_slot, donate_argnums=0)
 _insert_pages_jit = jax.jit(_insert_pages, donate_argnums=0)
+_gather_pages_jit = jax.jit(_gather_pages)
 
 
 class SlotEngine:
@@ -67,6 +78,7 @@ class SlotEngine:
                  decode_chunk: int = 4, paged: bool = False,
                  page_size: int = 16, n_pages: int | None = None,
                  prefix_cache: bool = False,
+                 spill_pages: int | None = 0,
                  metrics: MetricsRegistry | None = None,
                  trace: TraceBuffer | None = None):
         self.container = container
@@ -120,7 +132,8 @@ class SlotEngine:
                 self.n_slots * self.max_pages + 1)
             self.pool = PagePool(self.n_pages, self.page_size,
                                  self.n_slots, self.max_pages,
-                                 metrics=self.metrics, replica=self.name)
+                                 metrics=self.metrics, replica=self.name,
+                                 spill_pages=spill_pages)
             shapes = dict(batch=self.n_slots, n_pages=self.n_pages,
                           page_size=self.page_size, max_pages=self.max_pages)
             one_kind, chunk_kind = "decode_slots_paged", "decode_chunk_paged"
@@ -147,6 +160,12 @@ class SlotEngine:
         self.cache = (container.init_paged_cache(self.n_pages, self.page_size)
                       if self.paged
                       else container.init_slot_cache(self.n_slots, self.max_len))
+        if self.paged:
+            # device side of the registry's spill tier: the pool calls
+            # these to move page contents pool <-> host RAM. Both run
+            # BEFORE any dispatch that donates the cache (the engine
+            # sequences pool bookkeeping ahead of prefill/decode).
+            self.pool.set_spill_io(self._spill_save, self._spill_load)
         self.pos = np.zeros(self.n_slots, np.int32)
         self.cur_tok = np.zeros(self.n_slots, np.int32)
         self.free: list[int] = list(range(self.n_slots))
@@ -169,6 +188,13 @@ class SlotEngine:
         self._c_phits = self.metrics.counter("prefix_hits", **lab)
         self._c_pmiss = self.metrics.counter("prefix_misses", **lab)
         self._c_psaved = self.metrics.counter("prefix_tokens_saved", **lab)
+        # radix-registry hit taxonomy: ANCESTOR hits matched fewer complete
+        # blocks than the request declared (sharing a shorter family
+        # prefix), PARTIAL hits matched only a mid-block boundary (the
+        # front-partial merge with no whole shared row)
+        self._c_pancestor = self.metrics.counter("prefix_ancestor_hits",
+                                                 **lab)
+        self._c_ppartial = self.metrics.counter("prefix_partial_hits", **lab)
         # decode-chunk overshoot discards (bounded, counted waste): the
         # visible cost signal for decode_chunk tuning
         self._c_wasted = self.metrics.counter("tokens_wasted", **lab)
@@ -214,6 +240,14 @@ class SlotEngine:
     @property
     def prefix_tokens_saved(self) -> int:
         return self._c_psaved.value
+
+    @property
+    def prefix_ancestor_hits(self) -> int:
+        return self._c_pancestor.value
+
+    @property
+    def prefix_partial_hits(self) -> int:
+        return self._c_ppartial.value
 
     @property
     def tokens_wasted(self) -> int:
@@ -266,53 +300,81 @@ class SlotEngine:
         return (not self.paged
                 or self.pages_needed(req) <= self.pool.capacity)
 
-    # -- prefix cache --------------------------------------------------------
-    def _prefix_block(self, req: GenRequest):
-        """(digest, block, k_usable_pages) the request could SHARE, or
-        None. Only whole, fully-written pages are shared (the suffix always
-        starts page-aligned and keeps >= 1 real token so the hit prefill
-        still has a position to sample the first token from). Frontend
-        requests/archs bypass the cache: their leading KV rows are
-        per-request embeddings, not shareable prompt pages."""
+    # -- prefix registry -----------------------------------------------------
+    def _prefix_tokens(self, req: GenRequest):
+        """The declared-prefix tokens this request could SHARE through the
+        radix registry, or None. Capped at prompt_len - 1 so the suffix
+        prefill always keeps >= 1 real token to sample the first output
+        from. Frontend requests/archs bypass the registry: their leading KV
+        rows are per-request embeddings, not shareable prompt pages."""
         if not (self.prefix_cache and self.paged) or self.fe_len:
             return None
-        if req.frontend is not None or not req.prefix_digest:
+        if req.frontend is not None or not req.prefix_len:
             return None
-        P = req.prompt_len
-        k = min(req.prefix_len, P - 1) // self.page_size
-        if k < 1:
+        cap = min(req.prefix_len, req.prompt_len - 1)
+        if cap < 1:
             return None
-        return req.prefix_digest, req.prompt[:req.prefix_len], k
+        return req.prompt[:cap]
 
     def prefix_hit(self, req: GenRequest, touch: bool = False):
-        """(entry, shareable_page_count) on a cache hit, else None. The
-        pool compares the full token block, so a digest collision over
-        different tokens is a MISS, never a wrong share."""
-        blk = self._prefix_block(req)
-        if blk is None:
+        """The request's longest registered ancestry as a ``PrefixMatch``
+        (whole shared blocks root-first, plus an optional mid-block partial
+        boundary), or None when nothing matches. The radix walk compares
+        token blocks byte-for-byte, so a chained-digest collision over
+        different tokens is a MISS at that depth, never a wrong share."""
+        toks = self._prefix_tokens(req)
+        if toks is None:
             return None
-        digest, block, k = blk
-        entry = self.pool.lookup(digest, block, touch=touch)
-        if entry is None:
+        m = self.pool.match(toks, touch=touch)
+        if not m.all_nodes():
             return None
-        return entry, min(k, len(entry.pages))
+        return m
 
     def can_start(self, req: GenRequest) -> bool:
         """Right-now feasibility: a free slot AND (paged) enough unreserved
         pool pages to cover the request's worst case. False here is
         *backpressure*, not rejection -- the scheduler retries next tick.
-        A prefix-cache hit shrinks the footprint to the suffix pages (plus
-        the one-time cost of pinning a currently-evictable entry)."""
+        A registry hit shrinks the footprint to the suffix pages, plus the
+        one-time cost of pinning currently-evictable chain nodes and of the
+        free pages any spilled chain node needs to restore into."""
         if not (self.has_free() and self.fits(req)):
             return False
         if not self.paged:
             return True
         hit = self.prefix_hit(req)
         if hit is not None:
-            entry, k = hit
             return self.pool.can_reserve(
-                self.pages_needed(req) - k + self.pool.pin_cost(entry))
+                self.pages_needed(req) - len(hit.nodes)
+                + self.pool.pin_cost(hit) + self.pool.restore_cost(hit))
         return self.pool.can_reserve(self.pages_needed(req))
+
+    def _spill_save(self, page: int):
+        """Device -> host: copy one pool page out of the live cache (per
+        layer/stage) and sync it to numpy. The gather does NOT donate the
+        cache -- the pool only spills during host-side bookkeeping, before
+        the next donating dispatch."""
+        small = _gather_pages_jit(self.cache,
+                                  jnp.asarray([page], dtype=jnp.int32))
+        return jax.tree.map(np.asarray, jax.block_until_ready(small))
+
+    def _spill_load(self, page: int, payload) -> None:
+        """Host -> device: scatter a restored payload back into ``page``
+        (the registry pull). Reuses the prefill scatter with a one-page
+        row."""
+        self.cache = _insert_pages_jit(
+            self.cache, jax.tree.map(jnp.asarray, payload),
+            jnp.asarray([page], dtype=jnp.int32))
+
+    def _drain_tier_events(self, rid: int, tick: int) -> None:
+        """Record the pool's spill/restore movements since the last drain
+        as spans under the request whose allocation triggered them."""
+        for kind, digest in self.pool.drain_events():
+            if kind == "spill":
+                self.trace.record(rid, "spill", tick, replica=self.name,
+                                  digest=digest)
+            else:
+                self.trace.record(rid, "restore", tick, replica=self.name,
+                                  digest=digest)
 
     def reject_reason(self, req: GenRequest) -> str:
         """Why ``fits`` is False -- the oversized-rejection error path."""
@@ -379,17 +441,23 @@ class SlotEngine:
             seq = req.prompt
 
         P = int(seq.shape[0])
-        hit = self.prefix_hit(req, touch=True) if self.paged else None
+        hit = self.prefix_hit(req) if self.paged else None
         if hit is not None:
-            entry, kp = hit
-            # HIT: map the cached prefix pages read-only into the slot's
-            # leading table rows and prefill ONLY the uncached suffix, with
-            # positions offset past the shared prefix. Reservation covers
-            # just the private (suffix + overshoot) pages.
-            L = kp * self.page_size
+            # HIT: map the matched radix chain's pages read-only into the
+            # slot's leading table rows and prefill ONLY the unmatched
+            # suffix, positions offset past the match (which may end
+            # MID-page: the boundary node's page rides along as the
+            # front-partial merge operand). ALL pool bookkeeping --
+            # reservation, chain mapping, spill-tier restores, private
+            # allocation -- runs BEFORE the dispatch because the suffix
+            # prefill READS the live pool at the chain's pages.
+            k = len(hit.nodes)                  # whole shared table rows
+            L = hit.tokens_matched              # includes the partial frac
+            frac = hit.partial_len
             sfx = seq[L:]
-            S = int(sfx.shape[0])               # >= 1 by _prefix_block's cap
-            # clamp so shared rows + suffix pages never outrun the table
+            S = int(sfx.shape[0])              # >= 1 by _prefix_tokens' cap
+            # clamp so shared rows + merged suffix pages never outrun the
+            # page table
             bucket = min(self.bucket(S), self.max_len - L)
             key = (bucket, L)
             prefill = self._prefills.get(key)
@@ -401,29 +469,56 @@ class SlotEngine:
                 self._prefills[key] = prefill
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :S] = sfx
+            self.pool.reserve(slot, self.pages_needed(req) - k)
+            self.pool.share_chain(slot, hit)    # restores spilled nodes
+            self.pool.alloc_upto(slot, P - 1)   # private suffix pages
+            self._drain_tier_events(req.rid, tick)
             t0 = time.perf_counter()
             first, small = prefill(
                 self.params, self.cache, jnp.asarray(toks), jnp.int32(S),
-                jnp.asarray(entry.pages[:kp], dtype=jnp.int32))
+                jnp.asarray([n.page for n in hit.all_nodes()],
+                            dtype=jnp.int32))
             # the suffix prefill READS the live pool and the scatter below
-            # DONATES it: force completion before re-using the buffer
-            first = int(jax.block_until_ready(first)[0])
-            self.pool.reserve(slot, self.pages_needed(req) - kp)
-            self.pool.share(slot, entry, kp)
-            self.pool.alloc_upto(slot, P - 1)   # private suffix pages
-            np_ = -(-bucket // self.page_size)
-            row = jnp.asarray(self.pool.table[slot, kp:kp + np_])
+            # DONATES it: force completion of BOTH outputs (small reads the
+            # chain pages too) before re-using the buffer
+            first, small = jax.block_until_ready((first, small))
+            first = int(first[0])
+            self.pool.unpin()   # partial boundary page consumed by small
+            np_ = -(-(frac + bucket) // self.page_size)
+            row = jnp.asarray(self.pool.table[slot, k:k + np_])
             self.cache = _insert_pages_jit(self.cache, small, row)
             start_pos = P
-            self._c_phits.inc()
+            toks_p = self._prefix_tokens(req)
+            kc = len(toks_p) // self.page_size  # declared complete blocks
+            if k >= 1:
+                self._c_phits.inc()
+                if k < kc:
+                    # shared a shorter family's ancestor chain, not the
+                    # whole declared prefix -- the radix win over the flat
+                    # index, accounted apart for fig11
+                    self._c_pancestor.inc()
+            else:
+                self._c_ppartial.inc()
+            self.metrics.counter("prefix_hit_depth", replica=self.name,
+                                 depth=str(k)).inc()
             self._c_psaved.inc(L)
             self._c_positions.inc(S)
             self._c_prefill_disp.inc()
+            if kc > k:
+                # ancestor hit: deepen the family by registering the
+                # freshly-written complete declared blocks BELOW the
+                # matched chain (interior promotion; a partial boundary
+                # implies kc == k, nothing to register)
+                ps = self.page_size
+                self.pool.promote_chain(
+                    slot, hit.nodes[-1] if hit.nodes else None,
+                    [toks_p[i * ps:(i + 1) * ps] for i in range(k, kc)])
             self.prefill_s += time.perf_counter() - t0
             self.trace.record(req.rid, "prefill", tick, replica=self.name,
                               slot=slot, positions=S, bucket=bucket,
-                              pages=self.pages_needed(req) - kp,
-                              prefix_hit=True, tokens_saved=L)
+                              pages=self.pages_needed(req) - k,
+                              prefix_hit=True, tokens_saved=L,
+                              depth=k, partial=frac)
         else:
             bucket = self.bucket(P)
             prefill = self._prefills.get(bucket)
@@ -466,27 +561,34 @@ class SlotEngine:
             self.prefill_s += time.perf_counter() - t0
             self._c_positions.inc(req.frontend_len + P)
             self._c_prefill_disp.inc()
+            if self.paged:
+                # spills triggered by this allocation, recorded BEFORE the
+                # prefill span (spill precedes prefill in SPAN_TRANSITIONS)
+                self._drain_tier_events(req.rid, tick)
             self.trace.record(req.rid, "prefill", tick, replica=self.name,
                               slot=slot, positions=req.frontend_len + P,
                               bucket=bucket,
                               pages=(self.pages_needed(req) if self.paged
                                      else 0),
                               prefix_hit=False)
-            blk = self._prefix_block(req)
-            if blk is not None:
+            toks_p = self._prefix_tokens(req)
+            if toks_p is not None:
                 # MISS: promote the freshly-written, fully-covered leading
-                # prompt pages into the prefix index so later requests with
-                # the same block share them (first writer wins)
-                self._c_pmiss.inc()
-                # promote exactly the pages a later LOOKUP can match:
-                # _prefix_block caps at min(prefix_len, P-1) so the page
-                # holding the first suffix token stays private. Recomputing
-                # an uncapped prefix_len // page_size here used to cache one
-                # extra page when the whole prompt was prefix -- a page no
-                # lookup could ever reach, pinned until eviction (leak)
-                digest, block, kc = blk
+                # prompt pages into the registry as a chain of nodes -- one
+                # per complete declared block -- so later requests share
+                # ANY ancestor of them (first writer wins; an existing
+                # child or digest collision stops the chain there).
+                # _prefix_tokens caps at prompt_len - 1, so the page
+                # holding the first suffix token stays private: promoting
+                # an uncapped prefix_len // page_size used to cache a page
+                # no match could ever reach, pinned until eviction (leak)
+                ps = self.page_size
+                kc = len(toks_p) // ps
                 if kc >= 1:
-                    self.pool.cache_prefix(digest, block, slot, kc)
+                    self._c_pmiss.inc()
+                    self.pool.promote_chain(
+                        slot, None,
+                        [toks_p[i * ps:(i + 1) * ps] for i in range(kc)])
 
         if resuming:
             # the prefill re-sampled the token after seq's last element --
@@ -523,6 +625,7 @@ class SlotEngine:
             # so this can never fail mid-flight
             for slot in self.active:
                 self.pool.alloc_upto(slot, int(self.pos[slot]) + self.chunk - 1)
+                self._drain_tier_events(self.active[slot].rid, tick)
             toks, _, _, self.cache = self.decode(
                 self.params, self.cache,
                 jnp.asarray(self.cur_tok[:, None]), jnp.asarray(self.pos),
@@ -656,6 +759,13 @@ class SlotEngine:
                     "misses": self.prefix_misses,
                     "tokens_saved": self.prefix_tokens_saved,
                     "shared_pages": self.pool.cached_pages,
+                    "ancestor_hits": self.prefix_ancestor_hits,
+                    "partial_hits": self.prefix_partial_hits,
+                    "nodes": self.pool.radix.node_count,
+                    "max_depth": self.pool.radix.max_depth,
+                    "spilled_pages": self.pool.spilled_pages,
+                    "spills": self.pool.spills,
+                    "restores": self.pool.restores,
                 }
         return out
 
@@ -764,11 +874,14 @@ class ContinuousScheduler:
                 break
             # least-loaded engine keeps replica occupancy balanced without
             # breaking FIFO (the *request* order is still queue order);
-            # an engine whose pool already caches the request's prefix wins
-            # ties-or-better (prefix affinity WITHIN the pod -- each
-            # replica's page pool is its own)
-            eng = min(ready, key=lambda e: (e.prefix_hit(req) is None,
-                                            len(e.active)))
+            # an engine whose registry already holds the request's prefix
+            # wins ties-or-better, DEEPEST match first (prefix affinity
+            # WITHIN the pod -- each replica's page pool is its own)
+            def _affinity(e):
+                m = e.prefix_hit(req)
+                return (-m.tokens_matched if m is not None else 0,
+                        len(e.active))
+            eng = min(ready, key=_affinity)
             self.queue.pop_ready(self.tick)
             if req.state == "queued":   # resumes were already counted
                 self.queue.admitted += 1

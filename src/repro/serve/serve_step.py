@@ -195,24 +195,28 @@ class ServeStepBuilder:
         content carry right-pad garbage; the paged mask hides everything
         past the written positions until decode overwrites it.
 
-        With ``prefix_len`` > 0 (prefix-cache hit) this becomes the SUFFIX
-        prefill: ``tokens`` are only the uncached tail of the prompt
+        With ``prefix_len`` > 0 (prefix-registry hit) this becomes the
+        SUFFIX prefill: ``tokens`` are only the uncached tail of the prompt
         (bucketed to ``prompt_len``), the signature gains the live page
-        pool plus the (prefix_len / page_size,) physical page ids of the
-        cached prefix, query positions are offset past the prefix, and the
-        returned page-major cache covers the suffix pages only -- the host
-        scatters them into table rows starting AFTER the shared rows."""
+        pool plus the (ceil(prefix_len / page_size),) physical page ids of
+        the matched prefix chain, and query positions are offset past the
+        prefix. ``prefix_len`` may end MID-page (a radix partial match):
+        the boundary page -- the last ``prefix_pages`` entry -- is then a
+        read-only MERGE OPERAND: its first ``prefix_len % page_size``
+        positions are copied ahead of the suffix KV so the returned
+        page-major cache starts page-aligned, and the host scatters it into
+        the slot's private rows starting AFTER the fully-shared rows (the
+        boundary page itself stays shared property of the registry)."""
         if prefix_len:
             if frontend_len:
                 raise NotImplementedError(
                     "prefix-cached suffix prefill does not compose with "
                     "frontend embeddings")
-            if prefix_len % page_size:
-                raise ValueError("shared prefix must cover whole pages")
             span = prompt_len                  # the suffix bucket
             vocab = self.model.cfg.vocab_size
-            np_ = -(-span // page_size)
-            pad = np_ * page_size - span
+            frac = prefix_len % page_size      # front-partial merge width
+            np_ = -(-(frac + span) // page_size)
+            pad = np_ * page_size - (frac + span)
 
             def prefill_suffix_paged(params, pool, tokens, length,
                                      prefix_pages):
@@ -225,15 +229,25 @@ class ServeStepBuilder:
                     axis=1)[:, 0]
                 first = greedy_sample(last, vocab)
 
-                def to_pages(e):
+                def to_pages(e, pl):
+                    # e: (count, 1, S, n_kv, hd) suffix cache;
+                    # pl: (count, n_kv, n_pages, ps, hd) live pool leaf
                     e = e[:, 0]
+                    if frac:
+                        # front-partial merge: the shared boundary page's
+                        # first ``frac`` positions lead the slot's first
+                        # private page (KV there depends only on identical
+                        # preceding tokens, so the copy is sound)
+                        bp = jnp.take(pl, prefix_pages[-1], axis=2)
+                        bp = bp[:, :, :frac].transpose(0, 2, 1, 3)
+                        e = jnp.concatenate([bp.astype(e.dtype), e], axis=1)
                     if pad:
                         e = jnp.pad(e, ((0, 0), (0, pad), (0, 0), (0, 0)))
                     cnt, _, n_kv, hd = e.shape
                     e = e.reshape(cnt, np_, page_size, n_kv, hd)
                     return e.transpose(0, 3, 1, 2, 4)
 
-                return first, jax.tree.map(to_pages, cache)
+                return first, jax.tree.map(to_pages, cache, pool)
 
             return prefill_suffix_paged
 

@@ -1,14 +1,19 @@
-"""Refcounted PagePool property/invariant suite (the PR's foregrounded
+"""PagePool + PrefixRadix property/invariant suite (the PR's foregrounded
 test work).
 
-Random interleaved reserve/share/alloc/COW/release schedules must keep the
-full ``check()`` invariant set after EVERY operation: no page both free and
-referenced, refcounts equal to page-table occurrences, reservations always
-coverable, and full reclaim after all releases (plus draining the prefix
-index) returns every page. Plus the adversarial cases: digest collisions
-miss on the full-block compare, LRU eviction under pool pressure never
-frees a page with live refs, and releasing one sharer never clobbers
-another sharer's mapped prefix pages (the PR's release() audit).
+Random interleaved admit/share/alloc/COW/release/promote/spill schedules
+must keep the full ``check()`` invariant set after EVERY operation: no page
+both free and referenced, refcounts equal to shared-row occurrences, child
+refcounts bounded by the parent's, spilled nodes exactly mirroring the host
+store (conservation across tiers), reservations always coverable, and full
+reclaim after all releases (plus draining the registry) returns every page.
+Plus the adversarial cases: a forced chained-digest collision at an
+INTERIOR radix node misses on the byte compare and never corrupts the
+existing subtree, LRU eviction under pool pressure never frees a page with
+live refs (and breaks last-use ties deterministically by digest), a
+spill->restore round trip re-materializes a family by digest like a
+registry pull, and ``pin_cost`` dedupes by page id so admission never
+double-budgets a page reachable through two match nodes.
 
 Runs under the orchestrator marker (pure host bookkeeping, no device work).
 """
@@ -17,6 +22,7 @@ import numpy as np
 import pytest
 
 from repro.orchestrator.page_pool import GARBAGE_PAGE, PagePool
+from repro.orchestrator.prefix_registry import PrefixMatch
 
 pytestmark = pytest.mark.orchestrator
 
@@ -25,60 +31,84 @@ def _block(rng, n):
     return rng.integers(0, 512, n).astype(np.int32)
 
 
+def _promote_family(pool, slot, toks, ps):
+    """Admit ``slot`` as a miss and register every complete block of
+    ``toks`` -- the engine's miss-path promotion, at pool level."""
+    kc = len(toks) // ps
+    pool.reserve(slot, kc)
+    pool.alloc_upto(slot, kc * ps - 1)
+    return pool.promote_chain(slot, None,
+                              [toks[i * ps:(i + 1) * ps] for i in range(kc)])
+
+
 # ---------------------------------------------------------------------------
 # randomized schedules
 # ---------------------------------------------------------------------------
 
-def test_random_share_cow_schedules_conserve_pages():
-    """800 random admit(miss)/admit(hit)/extend/COW/release/promote/pause
-    steps: pages are conserved across the free-list, private ownership and
-    the prefix index; ``check()`` asserts the invariants after every op;
-    after releasing every slot and dropping the index the pool is fully
-    drained."""
+def test_random_radix_schedules_conserve_pages():
+    """800 random admit(miss)/admit(hit)/extend/COW/release/promote/pause/
+    spill steps over a family tree with ancestor-extension and a mid-block
+    tail (so interior promotion and partial in-node matches both arise):
+    pages are conserved across the free-list, private ownership, the
+    resident registry and the host spill tier; ``check()`` asserts the
+    invariants after every op; after releasing every slot and draining the
+    registry the pool is fully reclaimed."""
     rng = np.random.default_rng(0)
     ps = 8
-    pool = PagePool(n_pages=41, page_size=ps, n_slots=6, max_pages=16)
+    pool = PagePool(n_pages=41, page_size=ps, n_slots=6, max_pages=16,
+                    spill_pages=None)
     hi = {}          # slot -> high-water written position
     goal = {}        # slot -> total page rows the slot may cover
-    digests = [f"d{i}" for i in range(4)]
-    blocks = {d: _block(rng, ps * (1 + i % 3)) for i, d in enumerate(digests)}
+    base = _block(rng, 2 * ps)
+    fams = [
+        base,                                              # 2 blocks
+        _block(rng, ps),                                   # 1 block
+        np.concatenate([_block(rng, ps), _block(rng, 3)]),  # block + tail
+        np.concatenate([base, _block(rng, ps)]),           # extends fams[0]
+        base[:ps + 5],                                     # ends mid-block
+    ]
 
     for _ in range(800):
-        op = rng.integers(0, 6)
+        op = int(rng.integers(0, 9))
         busy = list(hi)
-        free_slots = [s for s in range(6) if s not in hi]
-        if op == 0 and free_slots:              # admit, maybe via the cache
-            slot = int(rng.choice(free_slots))
-            d = str(rng.choice(digests))
-            entry = pool.lookup(d, blocks[d], touch=True)
-            total = int(rng.integers(2, 10))
-            if entry is not None:
-                k = min(len(entry.pages), total - 1)
-                if k >= 1 and pool.can_reserve(total - k + pool.pin_cost(entry)):
-                    pool.reserve(slot, total - k)
-                    pool.share(slot, entry, k)
-                    goal[slot] = total
-                    hi[slot] = k * ps           # first private write position
-                    pool.alloc_upto(slot, hi[slot])
-            elif pool.can_reserve(total):
-                pool.reserve(slot, total)
+        idle = [s for s in range(6) if s not in hi]
+        if op in (0, 1) and idle:           # admit, through the registry
+            slot = int(rng.choice(idle))
+            toks = fams[int(rng.integers(0, len(fams)))]
+            m = pool.match(toks, touch=True)
+            k, kc = len(m.nodes), len(toks) // ps
+            total = kc + int(rng.integers(1, 5))
+            need = total - k
+            if pool.can_reserve(need + pool.pin_cost(m)
+                                + pool.restore_cost(m)):
+                pool.reserve(slot, need)
+                if m.all_nodes():
+                    pool.share_chain(slot, m)
+                    pool.check()            # pinned mid-admission state
+                    pool.unpin()
+                hi[slot] = int(rng.integers(k * ps, total * ps))
                 goal[slot] = total
-                hi[slot] = int(rng.integers(0, total * ps))
                 pool.alloc_upto(slot, hi[slot])
-                # sometimes promote the leading fully-written pages
-                kc = min(len(blocks[d]) // ps, (hi[slot] + 1) // ps)
-                if kc >= 1 and rng.integers(0, 2):
-                    pool.cache_prefix(d, blocks[d], slot, kc)
-        elif op == 1 and busy:                  # decode: extend alloc-on-write
+                # engine promotion: freshly written complete blocks join
+                # the registry under the deepest matched ancestor
+                if kc > k and m.partial is None and rng.integers(0, 2) \
+                        and hi[slot] + 1 >= kc * ps:
+                    parent = m.nodes[-1] if m.nodes else None
+                    pool.promote_chain(
+                        slot, parent,
+                        [toks[i * ps:(i + 1) * ps] for i in range(k, kc)])
+        elif op == 2 and busy:              # decode: extend alloc-on-write
             slot = int(rng.choice(busy))
-            cap = (len(pool.shared[slot]) + int(pool.reserved[slot])) * ps - 1
-            hi[slot] = min(cap, hi[slot] + int(rng.integers(1, 5)))
+            # coverable rows shrink as COW draws against the reservation
+            cap = (len(pool.shared[slot])
+                   + int(pool.reserved[slot])) * ps - 1
+            hi[slot] = min(cap, hi[slot] + int(rng.integers(1, 9)))
             pool.alloc_upto(slot, hi[slot])
-        elif op == 2 and busy:                  # release
+        elif op == 3 and busy:              # release
             slot = int(rng.choice(busy))
             pool.release(slot)
             del hi[slot], goal[slot]
-        elif op == 3 and busy:                  # copy-on-write a shared row
+        elif op == 4 and busy:              # copy-on-write a shared row
             slot = int(rng.choice(busy))
             if pool.shared[slot] and \
                     len(pool.owned[slot]) < pool.reserved[slot] and \
@@ -86,132 +116,154 @@ def test_random_share_cow_schedules_conserve_pages():
                 old, new = pool.cow(slot)
                 assert old != new and new not in pool.free
                 assert pool.table[slot, len(pool.shared[slot])] == new
-        elif op == 4:                           # cold lookups never mutate
-            d = str(rng.choice(digests))
-            pool.lookup(d, blocks[d])
-        elif op == 5 and busy:                  # page-level preemption
+        elif op == 5 and busy:              # page-level preemption
             slot = int(rng.choice(busy))
             pool.pause(slot)
-            # a paused slot holds nothing until its resume re-reserves
-            # (a later admit on the slot clears the mark via reserve)
             assert slot in pool.paused
             assert not pool.owned[slot] and not pool.shared[slot]
             assert pool.reserved[slot] == 0
             del hi[slot], goal[slot]
+        elif op == 6:                       # proactive tiering
+            pool.spill_one()
+        elif op == 7:                       # cold lookups never mutate
+            toks = fams[int(rng.integers(0, len(fams)))]
+            before = (pool.in_use, pool.spilled_pages)
+            pool.match(toks)
+            assert (pool.in_use, pool.spilled_pages) == before
+        elif op == 8:                       # tier events are well-formed
+            assert all(kind in ("spill", "restore")
+                       for kind, _ in pool.drain_events())
         pool.check()
 
     for slot in list(hi):
         pool.release(slot)
         pool.check()
     assert pool.total_owned == 0 and pool.total_reserved == 0
-    # cached pages survive full release (warm cache) ...
+    # resident cached pages survive full release (warm registry) ...
     assert pool.in_use == pool.cached_pages
-    # ... and draining the index reclaims every page
+    # ... and draining the registry reclaims every page and every payload
     pool.drop_prefixes()
     pool.check()
     assert pool.in_use == 0 and len(pool.free) == pool.capacity
-    assert not pool.prefix
+    assert pool.radix.node_count == 0 and pool.spilled_pages == 0
     assert pool.pages_allocated == pool.pages_freed > 0
 
 
 def test_refcounts_match_table_occurrences():
-    """Three sharers of one prefix: refcount tracks the mapping count
-    exactly, and every mapped row resolves to the cached page."""
+    """Three sharers of one 2-block family: refcount tracks the mapping
+    count exactly, and every mapped row resolves to the node's page."""
     ps = 4
     pool = PagePool(n_pages=17, page_size=ps, n_slots=4, max_pages=8)
     blk = _block(np.random.default_rng(1), 2 * ps)
     pool.reserve(0, 4)
     pool.alloc_upto(0, 3 * ps - 1)
-    assert pool.cache_prefix("d", blk, 0, 2)
-    entry = pool.lookup("d", blk)
+    nodes = pool.promote_chain(0, None, [blk[:ps], blk[ps:]])
+    assert [n.depth for n in nodes] == [1, 2]
     for slot in (1, 2):
-        pool.reserve(slot, 2)
-        pool.share(slot, entry, 2)
+        m = pool.match(blk, touch=True)
+        assert len(m.nodes) == 2 and m.partial is None
+        pool.reserve(slot, 1)
+        pool.share_chain(slot, m)
+        pool.unpin()
         pool.alloc_upto(slot, 2 * ps)
     pool.check()
-    for p in entry.pages:
-        assert pool.refcount[p] == 3            # promoter + two sharers
-        assert sum(int(pool.table[s, j]) == p
+    for n in nodes:
+        assert pool.refcount[n.page] == 3       # promoter + two sharers
+        assert sum(int(pool.table[s, j]) == n.page
                    for s in range(4) for j in range(8)) == 3
     pool.release(0)
     pool.check()
-    assert all(pool.refcount[p] == 2 for p in entry.pages)
+    assert all(pool.refcount[n.page] == 2 for n in nodes)
 
 
 # ---------------------------------------------------------------------------
 # adversarial: collisions, eviction, sharer isolation
 # ---------------------------------------------------------------------------
 
-def test_digest_collision_on_differing_tokens_misses():
-    """Same digest, different token block: lookup must MISS (full-block
-    compare), never serve the other block's pages -- for both a different
-    length and a same-length, different-content block."""
-    rng = np.random.default_rng(2)
+def test_digest_collision_at_interior_node_misses(monkeypatch):
+    """Forced chained-digest collision at an INTERIOR radix node: the walk
+    byte-compares blocks, so the colliding request misses at that depth --
+    and its promotion (first writer wins) leaves the registered subtree
+    untouched instead of corrupting it."""
+    from repro.orchestrator import prefix_registry
+    monkeypatch.setattr(prefix_registry, "chained_digest",
+                        lambda parent, block: f"{parent}|x")
     ps = 4
     pool = PagePool(n_pages=17, page_size=ps, n_slots=2, max_pages=8)
-    blk = _block(rng, 2 * ps)
+    rng = np.random.default_rng(2)
+    blk = _block(rng, 3 * ps)       # forged digests: |x, |x|x, |x|x|x
     pool.reserve(0, 4)
-    pool.alloc_upto(0, 3 * ps - 1)
-    assert pool.cache_prefix("collide", blk, 0, 2)
-    assert pool.lookup("collide", blk) is not None
-    other = blk.copy()
-    other[3] += 1
-    assert pool.lookup("collide", other) is None
-    assert pool.lookup("collide", blk[:ps]) is None
-    assert pool.lookup("collide", np.concatenate([blk, blk[:1]])) is None
-    # a colliding promotion does not overwrite the resident entry
+    pool.alloc_upto(0, 4 * ps - 1)
+    assert len(pool.promote_chain(
+        0, None, [blk[i * ps:(i + 1) * ps] for i in range(3)])) == 3
     pool.release(0)
+
+    # same first block, DIFFERENT second block, whose forged digest
+    # collides with the registered depth-2 child
+    other = blk.copy()
+    other[ps:2 * ps] = blk[ps:2 * ps][::-1] + 1
+    assert not np.array_equal(other[ps:2 * ps], blk[ps:2 * ps])
+    m = pool.match(other, touch=True)
+    assert len(m.nodes) == 1 and m.partial is None   # stops AT the collision
     pool.reserve(1, 4)
+    pool.share_chain(1, m)
+    pool.unpin()
     pool.alloc_upto(1, 3 * ps - 1)
-    assert not pool.cache_prefix("collide", other, 1, 2)
-    got = pool.lookup("collide", blk)
-    assert got is not None and np.array_equal(got.tokens, blk)
+    got = pool.promote_chain(1, m.nodes[-1], [other[ps:2 * ps],
+                                              other[2 * ps:]])
+    assert got == []                # nothing registered, nothing replaced
+    assert pool.radix.node_count == 3
+    full = pool.match(blk)          # original family fully matchable
+    assert len(full.nodes) == 3
+    assert np.array_equal(full.nodes[1].tokens, blk[ps:2 * ps])
     pool.check()
 
 
 def test_eviction_under_pressure_never_frees_live_refs():
-    """Pool pressure evicts refcount-0 prefixes LRU-first; a prefix with a
-    live sharer survives every eviction, and when nothing is evictable the
-    allocator fails cleanly instead of stealing."""
+    """With the spill tier disabled, pool pressure EVICTS refcount-0 nodes
+    LRU-first (leaf before parent); a family with a live sharer survives
+    every eviction, and when nothing is evictable the allocator fails
+    cleanly instead of stealing."""
     rng = np.random.default_rng(3)
     ps = 4
-    # capacity 12 = three 2-page prefixes + 6 private
+    # capacity 12 = three 2-page families + 6 private
     pool = PagePool(n_pages=13, page_size=ps, n_slots=4, max_pages=16)
     blocks = {d: _block(rng, 2 * ps) for d in ("a", "b", "c")}
     for slot, d in enumerate(blocks):
-        pool.reserve(slot, 2)
-        pool.alloc_upto(slot, 2 * ps - 1)
-        assert pool.cache_prefix(d, blocks[d], slot, 2)
-    # LRU order: touch "a" so "b" is the coldest refcount-0 entry
-    pool.lookup("a", blocks["a"], touch=True)
-    live = pool.lookup("c", blocks["c"], touch=True)
+        assert len(_promote_family(pool, slot, blocks[d], ps)) == 2
+    # LRU order: touch "a" so "b"'s nodes are the coldest refcount-0 ones
+    pool.match(blocks["a"], touch=True)
+    live = pool.match(blocks["c"], touch=True)
     pool.reserve(3, 2)
-    pool.share(3, live, 2)                      # "c" now has a live sharer
+    pool.share_chain(3, live)       # "c" now has a live sharer
+    pool.unpin()
     for slot in range(3):
         pool.release(slot)
     pool.check()
     assert pool.cached_pages == 6 and len(pool.free) == 6
 
     # headroom respects the live sharer's outstanding promise (2 pages):
-    # 6 free + 4 evictable - 2 promised = 8, never 10
+    # 6 free + 4 evictable ("a"+"b") - 2 promised = 8, never 10
     assert pool.free_unreserved == 8
     assert not pool.can_reserve(9)
-    # demand 8 private pages: drains the free list then evicts the
-    # COLDEST refcount-0 prefix ("b"); "a" (touched) and "c" (live) survive
+    # demand 8 private pages: drains the free list then evicts the COLDEST
+    # refcount-0 family ("b"), leaf first; "a" (touched) + "c" (live) stay
     pool.reserve(0, 8)
     pool.alloc_upto(0, 8 * ps - 1)
     pool.check()
-    assert "b" not in pool.prefix and {"a", "c"} <= set(pool.prefix)
-    assert pool.evictions == 1
-    # the live sharer now extends into its promised pages: pressure evicts
+    assert not pool.match(blocks["b"]).nodes
+    assert len(pool.match(blocks["a"]).nodes) == 2
+    assert pool.evictions == 2
+    # the live sharer extends into its promised pages: pressure evicts
     # "a" next -- and NEVER "c", whose pages slot 3 still maps
     pool.alloc_upto(3, 4 * ps - 1)
     pool.check()
-    assert "a" not in pool.prefix and "c" in pool.prefix
-    assert pool.evictions == 2
-    live_pages = set(live.pages)
-    assert not (live_pages & set(pool.free))
-    assert all(pool.table[3, j] == p for j, p in enumerate(live.pages))
+    assert not pool.match(blocks["a"]).nodes
+    assert len(pool.match(blocks["c"]).nodes) == 2
+    assert pool.evictions == 4
+    live_pages = [n.page for n in live.nodes]
+    assert not (set(live_pages) & set(pool.free))
+    assert all(pool.table[3, j] == p for j, p in enumerate(live_pages))
     # nothing evictable left and the free list is dry: admission fails
     # cleanly instead of stealing a live page
     assert not pool.can_reserve(1)
@@ -220,36 +272,149 @@ def test_eviction_under_pressure_never_frees_live_refs():
     pool.check()
 
 
+def test_eviction_order_deterministic_on_lru_ties():
+    """Victims tied on last_used order by digest: two runs over the same
+    state reclaim in the same order (satellite: deterministic LRU)."""
+    pool = PagePool(n_pages=5, page_size=4, n_slots=2, max_pages=8,
+                    spill_pages=None)
+    for slot, seed in enumerate((1, 2)):
+        _promote_family(pool, slot, _block(np.random.default_rng(seed), 4),
+                        4)
+        pool.release(slot)
+    for n in pool.radix.walk():
+        n.last_used = 7             # forced tie
+    first, second = pool.spill_one(), pool.spill_one()
+    assert [first, second] == sorted([first, second])
+    pool.check()
+
+
+# ---------------------------------------------------------------------------
+# the spill tier: registry pulls, store capacity
+# ---------------------------------------------------------------------------
+
+def test_spill_restore_round_trip_with_io_callbacks():
+    """A spilled family is re-materialized BY DIGEST on the next match
+    (the registry pull): payloads round-trip through the registered IO
+    callbacks, events drain in order, and the tier counters agree."""
+    ps = 4
+    saved, loaded = [], []
+    pool = PagePool(n_pages=9, page_size=ps, n_slots=2, max_pages=8,
+                    spill_pages=None)
+    pool.set_spill_io(lambda page: ("payload", page),
+                      lambda page, payload: loaded.append((page, payload)))
+    blk = _block(np.random.default_rng(9), 2 * ps)
+    assert len(_promote_family(pool, 0, blk, ps)) == 2
+    pool.release(0)
+    d_leaf = pool.spill_one()       # leaf first: parents keep resident kids
+    d_root = pool.spill_one()
+    assert d_leaf is not None and d_root is not None
+    assert pool.spilled_pages == 2 and pool.cached_pages == 0
+    assert pool.store.digests() == {d_leaf, d_root}
+    pool.check()
+    assert pool.drain_events() == [("spill", d_leaf), ("spill", d_root)]
+
+    m = pool.match(blk, touch=True)
+    assert len(m.nodes) == 2 and pool.restore_cost(m) == 2
+    pool.reserve(1, 1)
+    pool.share_chain(1, m)          # restores root-first, then maps
+    pool.unpin()
+    assert pool.spilled_pages == 0 and pool.cached_pages == 2
+    assert pool.spills == 2 and pool.restores == 2
+    assert pool.drain_events() == [("restore", d_root), ("restore", d_leaf)]
+    # both pages moved through the device callbacks with their payloads
+    assert [p for _, (_, p) in loaded] == sorted(p for _, (_, p) in loaded) \
+        or len(loaded) == 2
+    assert len(loaded) == 2
+    pool.check()
+
+
+def test_spill_store_capacity_prunes_lru_subtrees():
+    """A bounded host tier prunes the LRU spilled subtree past capacity:
+    the payload leaves the store AND the nodes leave the registry (a
+    capped registry, not a leak)."""
+    ps = 4
+    pool = PagePool(n_pages=9, page_size=ps, n_slots=2, max_pages=8,
+                    spill_pages=1)
+    rng = np.random.default_rng(10)
+    for slot in range(2):
+        _promote_family(pool, slot, _block(rng, ps), ps)
+        pool.release(slot)
+    assert pool.radix.node_count == 2
+    d1 = pool.spill_one()
+    assert pool.spilled_pages == 1
+    d2 = pool.spill_one()
+    # capacity 1: the older payload's subtree was pruned outright
+    assert pool.spilled_pages == 1 and pool.radix.node_count == 1
+    assert d1 not in pool.store and d2 in pool.store
+    assert pool.evictions == 1 and pool.spills == 2
+    pool.check()
+
+
+# ---------------------------------------------------------------------------
+# admission budgeting
+# ---------------------------------------------------------------------------
+
+def test_pin_cost_dedupes_by_page_id():
+    """``pin_cost`` budgets the headroom a share removes from the
+    evictable set -- BY PAGE ID. A match exposing the same node (same
+    page) through both the chain and the partial boundary must cost one
+    page, not two (the double-count made admission under-admit)."""
+    rng = np.random.default_rng(8)
+    ps = 4
+    pool = PagePool(n_pages=17, page_size=ps, n_slots=2, max_pages=8)
+    blk = _block(rng, 2 * ps)
+    nodes = _promote_family(pool, 0, blk, ps)
+    pool.release(0)
+
+    m = pool.match(blk)
+    assert pool.pin_cost(m) == 2            # honest match: distinct pages
+    dup = PrefixMatch(nodes=[nodes[0]], partial=nodes[0], partial_len=3)
+    assert pool.pin_cost(dup) == 1          # the regression: was 2
+    # property: over random node multisets the cost is exactly the number
+    # of DISTINCT evictable pages, never the multiset size
+    for _ in range(100):
+        k = int(rng.integers(1, 6))
+        picks = [nodes[int(i)] for i in rng.integers(0, len(nodes), k)]
+        m2 = PrefixMatch(nodes=picks[:-1], partial=picks[-1], partial_len=1)
+        assert pool.pin_cost(m2) == len({n.page for n in picks})
+
+
+# ---------------------------------------------------------------------------
+# sharer isolation, COW, API guards
+# ---------------------------------------------------------------------------
+
 def test_release_one_sharer_keeps_other_sharers_pages():
-    """The release() audit (PR bugfix): releasing one sharer frees ONLY its
-    private pages -- the shared prefix pages stay out of the free list and
-    the surviving sharer's table rows still resolve to them, so a
-    subsequent allocation cannot clobber a live prefix."""
+    """Releasing one sharer frees ONLY its private pages -- the shared
+    family pages stay out of the free list and the surviving sharer's
+    table rows still resolve to them, so a subsequent allocation cannot
+    clobber a live prefix."""
     rng = np.random.default_rng(4)
     ps = 4
     pool = PagePool(n_pages=21, page_size=ps, n_slots=3, max_pages=16)
     blk = _block(rng, 2 * ps)
     pool.reserve(0, 5)
     pool.alloc_upto(0, 4 * ps - 1)
-    assert pool.cache_prefix("sys", blk, 0, 2)
-    entry = pool.lookup("sys", blk)
-    pool.reserve(1, 3)
-    pool.share(1, entry, 2)
+    assert len(pool.promote_chain(0, None, [blk[:ps], blk[ps:]])) == 2
+    m = pool.match(blk, touch=True)
+    pool.reserve(1, 2)
+    pool.share_chain(1, m)
+    pool.unpin()
     pool.alloc_upto(1, 4 * ps - 1)
     survivor_rows = [int(pool.table[1, j]) for j in range(4)]
 
-    pool.release(0)                             # one sharer exits
+    pool.release(0)                         # one sharer exits
     pool.check()
-    assert not (set(entry.pages) & set(pool.free)), \
+    pages = [n.page for n in m.nodes]
+    assert not (set(pages) & set(pool.free)), \
         "release() freed pages another sharer still maps"
     assert [int(pool.table[1, j]) for j in range(4)] == survivor_rows
-    assert all(pool.refcount[p] == 1 for p in entry.pages)
+    assert all(pool.refcount[p] == 1 for p in pages)
 
     # hammer the free list: new exclusive allocations must not receive the
     # shared pages while slot 1 still maps them
     pool.reserve(2, 10)
     pool.alloc_upto(2, 10 * ps - 1)
-    assert not (set(entry.pages) & set(pool.owned[2]))
+    assert not (set(pages) & set(pool.owned[2]))
     pool.check()
     pool.release(1)
     pool.release(2)
@@ -258,8 +423,8 @@ def test_release_one_sharer_keeps_other_sharers_pages():
 
 
 def test_cow_remaps_last_shared_row():
-    """COW gives a sharer a private copy of its last shared page: the table
-    row flips to the new page, the old page stays cached for the other
+    """COW gives a sharer a private copy of its LAST shared page: the
+    table row flips to the new page, the node keeps its page for the other
     sharers, and the copy draws against the slot's reservation."""
     rng = np.random.default_rng(5)
     ps = 4
@@ -267,44 +432,47 @@ def test_cow_remaps_last_shared_row():
     blk = _block(rng, 2 * ps)
     pool.reserve(0, 4)
     pool.alloc_upto(0, 3 * ps - 1)
-    assert pool.cache_prefix("sys", blk, 0, 2)
-    entry = pool.lookup("sys", blk)
+    nodes = pool.promote_chain(0, None, [blk[:ps], blk[ps:]])
+    m = pool.match(blk, touch=True)
     pool.reserve(1, 3)
-    pool.share(1, entry, 2)
-    old_expected = entry.pages[1]
+    pool.share_chain(1, m)
+    pool.unpin()
+    old_expected = nodes[1].page
     old, new = pool.cow(1)
     assert old == old_expected and new != old
-    assert pool.table[1, 1] == new and pool.table[1, 0] == entry.pages[0]
-    assert pool.refcount[old] == 1              # only the promoter now
-    assert pool.table[0, 1] == old              # other sharer untouched
+    assert pool.table[1, 1] == new and pool.table[1, 0] == nodes[0].page
+    assert pool.refcount[old] == 1          # only the promoter now
+    assert nodes[1].resident                # the node itself is untouched
+    assert pool.table[0, 1] == old          # other sharer untouched
     assert pool.cow_copies == 1
     pool.check()
     # reservation accounting: the copy + remaining rows still bounded
     pool.alloc_upto(1, 3 * ps - 1)
     pool.check()
     with pytest.raises(RuntimeError):
-        pool.alloc_upto(1, 6 * ps - 1)          # beyond the reservation
+        pool.alloc_upto(1, 6 * ps - 1)      # beyond the reservation
     pool.release(0)
     pool.release(1)
     pool.check()
     assert pool.in_use == pool.cached_pages
 
 
-def test_share_requires_clean_slot_and_valid_count():
+def test_share_requires_clean_slot_and_nonempty_match():
     rng = np.random.default_rng(6)
     ps = 4
     pool = PagePool(n_pages=17, page_size=ps, n_slots=2, max_pages=8)
     blk = _block(rng, 2 * ps)
     pool.reserve(0, 4)
     pool.alloc_upto(0, 3 * ps - 1)
-    assert pool.cache_prefix("d", blk, 0, 2)
-    entry = pool.lookup("d", blk)
+    assert len(pool.promote_chain(0, None, [blk[:ps], blk[ps:]])) == 2
+    m = pool.match(blk)
     with pytest.raises(RuntimeError):
-        pool.share(0, entry, 1)                 # slot already maps pages
+        pool.share_chain(0, m)              # slot already maps pages
     pool.reserve(1, 2)
     with pytest.raises(ValueError):
-        pool.share(1, entry, 3)                 # more pages than cached
-    pool.share(1, entry, 2)
+        pool.share_chain(1, pool.match(_block(rng, ps)))   # empty match
+    pool.share_chain(1, m)
+    pool.unpin()
     pool.check()
 
 
@@ -313,10 +481,11 @@ def test_garbage_page_never_cached_or_shared():
     pool = PagePool(n_pages=9, page_size=4, n_slots=1, max_pages=8)
     pool.reserve(0, 4)
     pool.alloc_upto(0, 15)
-    assert pool.cache_prefix("d", _block(rng, 8), 0, 2)
+    blk = _block(rng, 8)
+    assert len(pool.promote_chain(0, None, [blk[:4], blk[4:]])) == 2
     assert GARBAGE_PAGE not in pool.shared[0]
-    for e in pool.prefix.values():
-        assert GARBAGE_PAGE not in e.pages
+    for n in pool.radix.walk():
+        assert n.page != GARBAGE_PAGE
     pool.release(0)
     pool.drop_prefixes()
     pool.check()

@@ -151,10 +151,14 @@ def test_replica_prefix_affinity_within_pod(rt):
 # adversarial edges
 # ---------------------------------------------------------------------------
 
-def test_digest_collision_at_engine_misses_and_stays_correct(rt):
-    """Two requests forced onto the SAME digest with different blocks: the
-    second must miss (full-block compare) and decode exactly the tokens an
+def test_digest_collision_at_engine_misses_and_stays_correct(rt, monkeypatch):
+    """Two requests forced onto the SAME chained digest with different
+    blocks: the second must miss (the radix walk byte-compares the full
+    block, never trusts the digest) and decode exactly the tokens an
     uncached engine produces for its prompt."""
+    from repro.orchestrator import prefix_registry
+    monkeypatch.setattr(prefix_registry, "chained_digest",
+                        lambda parent, block: f"{parent}|X")
     rng = np.random.default_rng(11)
     block_a = rng.integers(0, 256, 16)
     block_b = rng.integers(0, 256, 16)
@@ -164,13 +168,15 @@ def test_digest_collision_at_engine_misses_and_stays_correct(rt):
                     max_new_tokens=4, prefix_len=16)
     r2 = GenRequest(rid=1, prompt=np.concatenate([block_b, tail]),
                     max_new_tokens=4, prefix_len=16)
-    r2.prefix_digest = r1.prefix_digest        # forced collision
 
     pod = _pod(rt, True)
     _run(pod, [r1])
     _run(pod, [r2])
     eng = pod.engines[0]
     assert eng.prefix_hits == 0 and eng.prefix_misses == 2
+    # first-writer-wins: r2's colliding promotion must not replace or
+    # corrupt r1's registered blocks
+    assert eng.pool.radix.node_count == 2
     eng.pool.check()
 
     ref = GenRequest(rid=2, prompt=np.concatenate([block_b, tail]),
@@ -213,14 +219,12 @@ def test_promotion_never_caches_unreachable_pages(rt):
     _run(pod, [mk(0)])
     eng = pod.engines[0]
     pool = eng.pool
-    assert len(pool.prefix) == 1
-    entry = next(iter(pool.prefix.values()))
+    assert pool.radix.node_count == 1
     hit = eng.prefix_hit(mk(1))
     assert hit is not None
-    _, kp = hit
-    # the lookup reaches EVERY cached page: nothing promoted beyond what
-    # min(prefix_len, P-1) allows
-    assert kp == len(entry.pages) == 1
+    # the lookup reaches EVERY registered node: nothing promoted beyond
+    # what min(prefix_len, P-1) allows (no unreachable second page)
+    assert len(hit.nodes) == 1 and hit.partial is None
     assert pool.cached_pages == 1
     pool.check()
 
@@ -326,12 +330,15 @@ def test_cli_serve_prefix_cache_forwards_page_size(rt, capsys):
                      "--gen", "3", "--prefix-cache", "--shared-prefix", "16",
                      "--page-size", "8"]) == 0
     out = capsys.readouterr().out
-    assert "prefix cache: 3 hits / 1 misses" in out
+    assert "prefix cache: 3 hits (0 ancestor, 0 partial) / 1 misses" in out
     # 16-token block at page size 8 = 2 whole pages (16 positions) per hit
     assert "48 prefill tokens skipped" in out
     assert cli_main(["--root", root, "ps"]) == 0
     ps = capsys.readouterr().out
     assert "phits=3/1 shared=2" in ps
+    # registry stats ride the same line: 2 registered nodes, depth 2,
+    # nothing spilled at this pool size
+    assert "radix=2n:2d" in ps and "spilled=0" in ps
 
 
 def test_serve_driver_prefix_cache_parity(rt):
