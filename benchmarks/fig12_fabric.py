@@ -1,0 +1,265 @@
+"""Fig. 12 (new): cross-host serving fabric -- fault injection and
+elastic pods over a real message transport.
+
+The fabric claim, measured end to end: a router speaking to pods over
+framed messages (not method calls) keeps serving through a pod death.
+The headline harness runs one worker PROCESS per pod over stdin/stdout
+pipes and ``kill -9``'s one mid-decode: the router's heartbeat/EOF
+detection evicts the dead pod from the placement ring, its in-flight
+requests are re-routed to survivors exactly once each (requests with
+committed tokens resume via the preemption machinery's suffix
+re-prefill), and the elastic fleet heals back to its floor.
+
+Acceptance bars (they FAIL the run, not just fields in the artifact):
+
+  * **zero lost requests**: every submitted request reaches ``done``
+    despite the kill, and the fleet-wide span-closure check (pooled
+    across per-process span files) confirms every routed rid reached a
+    terminal span somewhere;
+  * **bitwise token parity**: every re-routed request's tokens are
+    identical to an unkilled run of the same trace -- failover is
+    invisible in the output;
+  * **the fault was real**: the victim had in-flight mid-decode work at
+    kill time, exactly one eviction fired, and >= 1 request re-routed;
+  * **elastic fleet**: under a token-backlog trigger the fleet scales
+    above its initial size, and after a sustained idle streak drains +
+    retires back down -- with the outstanding-token ledger settling to
+    exactly zero.
+
+Metrics are written to ``BENCH_fabric.json`` (``--smoke`` writes
+``BENCH_fabric_smoke.json`` so CI never clobbers the full artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import signal
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+IMAGEFILE = """
+FROM scratch
+ARCH llama3.2-3b-smoke
+SHAPE decode_32k seq_len=64 global_batch=4
+MESH local
+PRECISION compute=float32 params=float32
+COLLECTIVES generic
+"""
+
+POD_KWARGS = dict(replicas=1, n_slots=2, max_len=96)
+MAX_TICKS = 20_000
+
+
+def _trace(n):
+    from repro.orchestrator import GenRequest
+    rng = np.random.default_rng(0)
+    return [GenRequest(
+        rid=i,
+        prompt=rng.integers(0, 256, int(rng.integers(4, 16))),
+        max_new_tokens=int(rng.integers(6, 20)),
+        arrival=i // 6) for i in range(n)]
+
+
+def _fresh_root(tag):
+    from repro.core.runtime import Runtime
+    rt = Runtime(tempfile.mkdtemp(prefix=f"stevedore-fig12-{tag}-"))
+    rt.build(IMAGEFILE, tag="bench")
+    return rt
+
+
+def _router(rt, spawn, **kw):
+    from repro.orchestrator import FabricRouter
+    return FabricRouter(spawn, runtime=rt, **kw)
+
+
+def _kill_mid_decode(router, kill):
+    """Step until some member holds a request that has committed tokens
+    but not finished (mid-decode), then ``kill`` that member. Returns the
+    victim's pod_id and its in-flight count at kill time."""
+    while router.busy and router.tick < MAX_TICKS:
+        victim = next(
+            (m for m in router.members.values()
+             if any(r.tokens and len(r.tokens) < r.max_new_tokens
+                    for r in m.assigned.values())),
+            None)
+        if victim is not None:
+            inflight = len(victim.assigned)
+            kill(victim)
+            return victim.pod_id, inflight
+        router.step()
+    raise AssertionError("no member was ever mid-decode; trace too small")
+
+
+def _drain(router):
+    while router.busy and router.tick < MAX_TICKS:
+        router.step()
+    assert not router.busy, "fabric run did not converge"
+    return router.completed
+
+
+def _check_zero_lost(reqs, done, tag):
+    assert len(done) == len(reqs), \
+        f"{tag}: {len(reqs) - len(done)} request(s) lost"
+    assert all(r.state == "done" for r in reqs), \
+        f"{tag}: non-terminal states {sorted({r.state for r in reqs})}"
+
+
+def _parity(base_tokens, reqs, tag):
+    mismatch = [r.rid for r in reqs if base_tokens[r.rid] != list(r.tokens)]
+    assert not mismatch, \
+        f"{tag}: token mismatch vs unkilled run for rids {mismatch}"
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    from repro.orchestrator import (loopback_spawner, proc_spawner,
+                                    load_fleet_spans)
+    from repro.orchestrator.obs import validate_fleet_closure, \
+        validate_span_log
+
+    n = 12 if smoke else 24
+
+    # A) unkilled loopback baseline: the token oracle for every later arm
+    rt = _fresh_root("base")
+    spawn = loopback_spawner(rt, rt.pull("bench"), pod_kwargs=POD_KWARGS)
+    router = _router(rt, spawn, pods=2, min_pods=2)
+    reqs = _trace(n)
+    router.submit(reqs)
+    base_done = _drain(router)
+    _check_zero_lost(reqs, base_done, "baseline")
+    base_tokens = {r.rid: list(r.tokens) for r in reqs}
+    base_ticks = router.tick
+    router.close()
+
+    # B) loopback fault injection: deterministic kill mid-decode
+    rt = _fresh_root("loop")
+    spawn = loopback_spawner(rt, rt.pull("bench"), pod_kwargs=POD_KWARGS)
+    router = _router(rt, spawn, pods=2, min_pods=2)
+    reqs = _trace(n)
+    router.submit(reqs)
+    victim, loop_inflight = _kill_mid_decode(
+        router, lambda m: m.transport.kill())
+    loop_done = _drain(router)
+    _check_zero_lost(reqs, loop_done, "loopback-kill")
+    _parity(base_tokens, reqs, "loopback-kill")
+    loop_fabric = router.status()["fabric"]
+    assert loop_fabric["evictions"] == 1, loop_fabric
+    assert loop_fabric["reroutes"] >= 1, \
+        "victim had in-flight work but nothing re-routed"
+    assert router.outstanding_total == 0, "ledger did not settle to zero"
+    loop_buffers = router.trace_buffers()
+    validate_span_log(loop_buffers)
+    loop_closure = validate_fleet_closure(loop_buffers)
+    rerouted = [r for r in reqs if r.reroutes]
+    assert len(rerouted) == loop_closure["rerouted"]
+    router.close()
+
+    # C) loopback elastic: token-backlog scale-up, idle-streak scale-down
+    rt = _fresh_root("elastic")
+    spawn = loopback_spawner(rt, rt.pull("bench"), pod_kwargs=POD_KWARGS)
+    router = _router(rt, spawn, pods=1, min_pods=1, max_pods=3,
+                     scale_up_tokens=40, scale_idle_ticks=6)
+    reqs = _trace(n)
+    router.submit(reqs)
+    peak = 1
+    while router.busy and router.tick < MAX_TICKS:
+        router.step()
+        peak = max(peak, len(router.members))
+    _check_zero_lost(reqs, router.completed, "elastic")
+    _parity(base_tokens, reqs, "elastic")
+    # idle past the streak so drains + retires fire
+    for _ in range(40):
+        router.step()
+    elastic_fabric = router.status()["fabric"]
+    assert peak > 1, "backlog never triggered a scale-up"
+    assert elastic_fabric["retired"] >= 1, \
+        "idle fleet never drained + retired a pod"
+    assert len(router.members) >= 1
+    assert router.outstanding_total == 0
+    router.close()
+
+    # D) the headline: process-per-pod harness, real kill -9 mid-decode
+    rt = _fresh_root("proc")
+    spawn = proc_spawner(rt.root, imagefile=IMAGEFILE,
+                         pod_kwargs=POD_KWARGS)
+    router = _router(rt, spawn, pods=2, min_pods=2, wall_clock=True,
+                     heartbeat_every=2)
+    reqs = _trace(n)
+    router.submit(reqs)
+    proc_victim, proc_inflight = _kill_mid_decode(
+        router, lambda m: os.kill(m.transport.pid, signal.SIGKILL))
+    proc_done = _drain(router)
+    _check_zero_lost(reqs, proc_done, "proc-kill")
+    _parity(base_tokens, reqs, "proc-kill")
+    proc_fabric = router.status()["fabric"]
+    assert proc_fabric["evictions"] == 1, proc_fabric
+    assert proc_fabric["reroutes"] >= 1
+    assert router.outstanding_total == 0
+    router.close()
+    # per-process span files, pooled: the cross-host closure check
+    proc_buffers = load_fleet_spans(rt.root, fleet=router.fleet)
+    validate_span_log(proc_buffers)
+    proc_closure = validate_fleet_closure(proc_buffers)
+    assert proc_closure["rerouted"] >= 1
+
+    payload = {
+        "arch": "llama3.2-3b-smoke",
+        "smoke": smoke,
+        "requests": n,
+        "pod_kwargs": POD_KWARGS,
+        "baseline_ticks": base_ticks,
+        "loopback_kill": {
+            "victim": victim,
+            "inflight_at_kill": loop_inflight,
+            "evictions": loop_fabric["evictions"],
+            "reroutes": loop_fabric["reroutes"],
+            "rerouted_requests": sorted(r.rid for r in rerouted),
+            "closure": loop_closure,
+            "token_parity": True,
+        },
+        "elastic": {
+            "peak_pods": peak,
+            "spawned": elastic_fabric["spawned"],
+            "retired": elastic_fabric["retired"],
+            "token_parity": True,
+        },
+        "proc_kill": {
+            "victim": proc_victim,
+            "inflight_at_kill": proc_inflight,
+            "evictions": proc_fabric["evictions"],
+            "reroutes": proc_fabric["reroutes"],
+            "closure": proc_closure,
+            "token_parity": True,
+        },
+        "requests_lost": 0,
+    }
+    out = ("BENCH_fabric_smoke.json" if smoke else "BENCH_fabric.json")
+    Path(out).write_text(json.dumps(payload, indent=2))
+
+    return [
+        ("fig12/requests", float(n), "staggered trace, every arm"),
+        ("fig12/loopback_reroutes", float(loop_fabric["reroutes"]),
+         f"in-flight moved off {victim} after deterministic kill"),
+        ("fig12/proc_reroutes", float(proc_fabric["reroutes"]),
+         f"in-flight moved off {proc_victim} after kill -9"),
+        ("fig12/requests_lost", 0.0,
+         "fleet span closure: every routed rid terminal"),
+        ("fig12/token_parity", 1.0,
+         "rerouted tokens bitwise == unkilled run (all arms)"),
+        ("fig12/elastic_peak_pods", float(peak),
+         "token-backlog scale-up above the 1-pod floor"),
+        ("fig12/elastic_retired", float(elastic_fabric["retired"]),
+         "idle-streak drain + retire back down"),
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace (CI)")
+    a = ap.parse_args()
+    for name, value, derived in run(smoke=a.smoke):
+        print(f"{name},{value:.3f},{derived}")

@@ -21,7 +21,7 @@ def main() -> None:
     names = args.only.split(",") if args.only else [
         "fig2_parity", "fig3_collective_abi", "fig4_import_problem",
         "fig5_tuned_kernel", "fig6_serving", "fig7_paged_kv",
-        "fig9_prefix_cache", "fig10_slo",
+        "fig9_prefix_cache", "fig10_slo", "fig12_fabric",
         "roofline_summary",
     ]
     failed = 0

@@ -17,7 +17,13 @@ them:
    scope emits must be closed under the table: each emitted kind either
    may start a lifecycle or has an emitted predecessor, and each emitted
    non-terminal kind has an emitted successor (``preempt`` without
-   ``resume``/``shed``/``reject`` anywhere is a stuck lifecycle).
+   ``resume``/``shed``/``reject`` anywhere is a stuck lifecycle);
+4. ``TERMINAL_SPANS`` must be a literal subset of ``SPAN_KINDS`` and
+   genuinely terminal: no transition may name a terminal kind as a
+   predecessor (``validate_span_log`` refuses successors of terminals at
+   runtime, and the cross-process fleet-closure check counts a lifecycle
+   closed at them -- a table that disagrees makes the fabric's
+   zero-lost-requests gate vacuous).
 """
 
 from __future__ import annotations
@@ -69,8 +75,10 @@ class SpanLifecycleCheck(Check):
         if kinds and transitions:
             yield from self._check_exporter(tracing, kinds)
         # emission sites; orchestrator files pool into one closure check
-        # (the router emits "route" into the pod buffer, the scheduler
-        # continues with "submit" -- lifecycles cross files by design)
+        # (the router records "route"/"reroute" in its own buffer, the
+        # scheduler continues with "submit".."complete" in the pod's --
+        # lifecycles cross files AND processes by design; the runtime
+        # analog pools per-process span files via validate_fleet_closure)
         emitted: dict[str, tuple[str, int]] = {}  # kind -> first site
         for f in project.files:
             if f.tree is None or f is tracing:
@@ -142,7 +150,46 @@ class SpanLifecycleCheck(Check):
                         f"(missing {missing}, extra {extra})",
                 hint="every span kind needs an entry in the transition "
                      "table"))
+        findings.extend(self._check_terminals(tracing, kinds, transitions))
         return kinds, transitions, findings
+
+    def _check_terminals(self, tracing, kinds, transitions):
+        term_node = _module_assign(tracing.tree, "TERMINAL_SPANS")
+        try:
+            terminals = (tuple(ast.literal_eval(term_node))
+                         if term_node is not None else None)
+        except ValueError:
+            terminals = None
+        if terminals is None:
+            yield Finding(
+                rule=self.rule, file=tracing.rel, line=1,
+                message="TERMINAL_SPANS is missing or not a literal "
+                        "tuple",
+                hint="define TERMINAL_SPANS next to SPAN_TRANSITIONS; "
+                     "the fleet-closure check counts lifecycles closed "
+                     "at these kinds")
+            return
+        if kinds:
+            unknown = sorted(set(terminals) - set(kinds))
+            if unknown:
+                yield Finding(
+                    rule=self.rule, file=tracing.rel, line=1,
+                    message=f"TERMINAL_SPANS entries {unknown} are not "
+                            "in SPAN_KINDS")
+        for kind in terminals:
+            followers = sorted(
+                k for k, preds in transitions.items()
+                if isinstance(preds, tuple) and kind in preds)
+            if followers:
+                yield Finding(
+                    rule=self.rule, file=tracing.rel, line=1,
+                    message=f"terminal span {kind!r} is a legal "
+                            f"predecessor of {followers} -- terminals "
+                            "must have no successors",
+                    hint="either drop the kind from TERMINAL_SPANS or "
+                         "remove it from those transition entries; "
+                         "validate_span_log and the fleet-closure check "
+                         "both assume terminals end the log")
 
     def _check_exporter(self, tracing, kinds):
         exporter = _find_function(tracing.tree, "export_chrome")

@@ -103,9 +103,17 @@ def cmd_ps(rt: Runtime, args) -> int:
                     f",rej={c.get('rejected', 0)}"
                     f",shed={c.get('shed', 0)}]"
                     for pol, c in sorted(pod.get("by_policy", {}).items()))
+                # fabric routers carry liveness: live member count vs
+                # fleet size, plus eviction/re-route totals
+                fab = pod.get("fabric") or {}
+                fabric = (f" live={fab.get('live', 0)}"
+                          f"/{len(pod.get('pods', []))}"
+                          f" evicted={fab.get('evictions', 0)}"
+                          f" rerouted={fab.get('reroutes', 0)}"
+                          if fab else "")
                 print(f"{pod.get('router', p.stem):26s} "
                       f"policy={pod.get('policy', '?')} "
-                      f"pods={len(pod.get('pods', []))} "
+                      f"pods={len(pod.get('pods', []))}{fabric} "
                       f"capacity={pod.get('capacity', 0)} "
                       f"free={pod.get('free_slots', 0)} "
                       f"pending={pod.get('pending', 0)} "
@@ -198,6 +206,17 @@ def cmd_serve(rt: Runtime, args) -> int:
         argv += ["--shed-ttft-p99", str(args.shed_ttft_p99)]
     if args.trace:
         argv += ["--trace", args.trace]
+    if args.fabric != "none":
+        argv += ["--fabric", args.fabric,
+                 "--min-pods", str(args.min_pods),
+                 "--heartbeat-every", str(args.heartbeat_every),
+                 "--miss-limit", str(args.miss_limit)]
+        if args.max_pods is not None:
+            argv += ["--max-pods", str(args.max_pods)]
+        if args.scale_up_tokens is not None:
+            argv += ["--scale-up-tokens", str(args.scale_up_tokens)]
+        if args.scale_idle_ticks is not None:
+            argv += ["--scale-idle-ticks", str(args.scale_idle_ticks)]
     serve_main(argv)
     return 0
 
@@ -220,7 +239,8 @@ def cmd_top(rt: Runtime, args) -> int:
     def render() -> int:
         pods_dir = rt.root / "pods"
         files = sorted(pods_dir.glob("*.json")) if pods_dir.exists() else []
-        print(f"{'NAME':26s} {'PHASE':8s} {'QUEUE':>5s} {'POOL':>9s} "
+        print(f"{'NAME':26s} {'PHASE':8s} {'LIVE':>5s} "
+              f"{'QUEUE':>5s} {'POOL':>9s} "
               f"{'PREFIX':>7s} {'SP/RS':>7s} {'WASTED':>6s} "
               f"{'PREEMPT':>7s} {'SHED':>5s} "
               f"{'TOKENS':>7s} "
@@ -239,6 +259,11 @@ def cmd_top(rt: Runtime, args) -> int:
             pid = pod.get("pid")
             if pid is not None and not _pid_alive(pid):
                 phase = "exited"
+            # fabric routers report member liveness (heartbeat view);
+            # plain pods/routers have no probe, shown as '-'
+            fab = pod.get("fabric") or {}
+            live = (f"{fab.get('live', 0)}/{len(pod.get('pods', []))}"
+                    if is_router and fab else "-")
             snap = pod["metrics"]
             queue = snapshot_total(snap, "queue_depth")
             in_use = snapshot_total(snap, "pool_in_use")
@@ -266,7 +291,7 @@ def cmd_top(rt: Runtime, args) -> int:
             # request to pull out of the span trace when p99 spikes
             p99_rid = snapshot_exemplar(snap, "latency_ticks", 99)
             p99_rid = "-" if p99_rid is None else str(p99_rid)
-            print(f"{name:26s} {phase:8s} {queue:>5d} {pool:>9s} "
+            print(f"{name:26s} {phase:8s} {live:>5s} {queue:>5d} {pool:>9s} "
                   f"{rate:>7s} {sprs:>7s} "
                   f"{snapshot_total(snap, 'tokens_wasted'):>6d} "
                   f"{snapshot_total(snap, 'preemptions'):>7d} "
@@ -382,6 +407,25 @@ def main(argv=None) -> int:
     p.add_argument("--trace", default=None, metavar="PATH",
                    help="export request-lifecycle spans as Chrome "
                         "trace-event JSON (open in Perfetto)")
+    p.add_argument("--fabric", choices=("none", "loopback", "proc"),
+                   default="none",
+                   help="serve over the cross-host fabric: framed message "
+                        "transport in-process (loopback) or one OS "
+                        "process per pod (proc)")
+    p.add_argument("--min-pods", type=int, default=1,
+                   help="elastic floor: heal back to N pods (--fabric)")
+    p.add_argument("--max-pods", type=int, default=None,
+                   help="elastic ceiling (--fabric); default --pods")
+    p.add_argument("--heartbeat-every", type=int, default=4,
+                   help="fabric liveness probe cadence in ticks")
+    p.add_argument("--miss-limit", type=int, default=2,
+                   help="consecutive missed probes before eviction")
+    p.add_argument("--scale-up-tokens", type=int, default=None,
+                   help="spawn a pod when outstanding tokens per live pod "
+                        "exceed N (--fabric)")
+    p.add_argument("--scale-idle-ticks", type=int, default=None,
+                   help="drain+retire the newest pod after N idle ticks "
+                        "(--fabric)")
 
     p = sub.add_parser("top",
                        help="live serving metrics (queue/pool/latency) "

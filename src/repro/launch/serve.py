@@ -105,9 +105,10 @@ def _arch_config(rt: Runtime, image):
     return get_config(cfg["arch"]["name"], **cfg["arch"].get("overrides", {}))
 
 
-def _make_pod(rt: Runtime, image, args, cfg):
-    """One serving pod sized for the trace (shared by every fleet member)."""
-    from repro.orchestrator import Pod
+def _pod_kwargs(args, cfg) -> dict:
+    """Pod constructor kwargs sized for the trace -- shared by every fleet
+    member, whether the pod is built here or inside a fabric worker
+    process (the kwargs are JSON-serializable by construction)."""
     # per-request span: frontend prefix + shared system prompt + prompt +
     # gen + chunk-overshoot
     shared = max(0, int(getattr(args, "shared_prefix", 0)))
@@ -115,14 +116,20 @@ def _make_pod(rt: Runtime, image, args, cfg):
     if getattr(args, "paged", False):
         # paged: max_len is only the per-request span; double it so long
         # requests fit, and size the pool to the contiguous bank's HBM
-        return Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
-                   max_len=2 * max_len, platform=args.platform,
-                   seed=args.seed, paged=True, page_size=args.page_size,
-                   n_pages=args.slots * (-(-max_len // args.page_size)) + 1,
-                   prefix_cache=bool(getattr(args, "prefix_cache", False)),
-                   spill_pages=getattr(args, "spill_pages", 0))
-    return Pod(rt, image, replicas=args.replicas, n_slots=args.slots,
-               max_len=max_len, platform=args.platform, seed=args.seed)
+        return dict(replicas=args.replicas, n_slots=args.slots,
+                    max_len=2 * max_len, platform=args.platform,
+                    seed=args.seed, paged=True, page_size=args.page_size,
+                    n_pages=args.slots * (-(-max_len // args.page_size)) + 1,
+                    prefix_cache=bool(getattr(args, "prefix_cache", False)),
+                    spill_pages=getattr(args, "spill_pages", 0))
+    return dict(replicas=args.replicas, n_slots=args.slots,
+                max_len=max_len, platform=args.platform, seed=args.seed)
+
+
+def _make_pod(rt: Runtime, image, args, cfg):
+    """One serving pod sized for the trace (shared by every fleet member)."""
+    from repro.orchestrator import Pod
+    return Pod(rt, image, **_pod_kwargs(args, cfg))
 
 
 def serve_continuous(rt: Runtime, image, args) -> dict:
@@ -252,6 +259,99 @@ def serve_continuous(rt: Runtime, image, args) -> dict:
     return out
 
 
+def serve_fabric(rt: Runtime, image, args) -> dict:
+    """The same trace served over the cross-host fabric: router and pods
+    speak the framed message protocol instead of method calls.
+
+    ``--fabric loopback`` keeps workers in-process (deterministic, the
+    codec still round-trips every message); ``--fabric proc`` launches
+    one worker PROCESS per pod over stdin/stdout pipes -- the
+    configuration the fault-injection benchmark kills pods under.
+    ``--min-pods``/``--max-pods`` bound the elastic fleet; scale-up
+    triggers on the outstanding-token backlog per live pod, scale-down
+    drains the newest pod after a sustained idle streak."""
+    from repro.orchestrator.fabric import (
+        FABRIC_POLICIES, FabricRouter, load_fleet_spans,
+        loopback_spawner, proc_spawner)
+    from repro.orchestrator.obs import (
+        decomposition, export_chrome, validate_fleet_closure)
+    from repro.orchestrator.telemetry import latency_summary
+    if args.policy not in FABRIC_POLICIES:
+        raise SystemExit(f"--fabric supports policies {FABRIC_POLICIES}, "
+                         f"not {args.policy!r}")
+    cfg = _arch_config(rt, image)
+    pod_kwargs = _pod_kwargs(args, cfg)
+    if args.fabric == "proc":
+        imagefile = (Path(args.image).read_text()
+                     if Path(args.image).exists() else None)
+        spawn = proc_spawner(
+            args.root, imagefile=imagefile,
+            ref=None if imagefile else args.image,
+            pod_kwargs=pod_kwargs, fairness_cap=args.fairness_cap)
+    else:
+        spawn = loopback_spawner(rt, image, pod_kwargs=pod_kwargs,
+                                 fairness_cap=args.fairness_cap)
+    router = FabricRouter(
+        spawn, runtime=rt, pods=max(1, args.pods), policy=args.policy,
+        min_pods=max(1, getattr(args, "min_pods", 1) or 1),
+        max_pods=getattr(args, "max_pods", None),
+        heartbeat_every=getattr(args, "heartbeat_every", 4),
+        miss_limit=getattr(args, "miss_limit", 2),
+        scale_up_tokens=getattr(args, "scale_up_tokens", None),
+        scale_idle_ticks=getattr(args, "scale_idle_ticks", None),
+        wall_clock=args.fabric == "proc")
+    rng = np.random.default_rng(args.seed)
+    reqs = _build_requests(args, cfg, rng)
+
+    t0 = time.perf_counter()
+    router.submit(reqs)
+    done = router.run()
+    wall = time.perf_counter() - t0
+    fleet = router.status()
+    # loopback worker buffers are reachable only through the membership,
+    # which close() clears -- capture them first. proc workers flush span
+    # FILES at retire, so those are pooled after close.
+    local_buffers = (None if args.fabric == "proc"
+                     else router.trace_buffers())
+    router.close()
+
+    toks = sum(len(r.tokens) for r in done)
+    out = {
+        "mode": "fabric",
+        "fabric": args.fabric,
+        "pods": args.pods,
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": wall,
+        "shed": len(router.shedded),
+        "rejected": len(router.rejected),
+        **latency_summary(done),
+        "request_tokens": {r.rid: list(r.tokens) for r in done},
+        "fleet": fleet,
+        "reroutes": fleet["fabric"]["reroutes"],
+        "evictions": fleet["fabric"]["evictions"],
+    }
+    buffers = (load_fleet_spans(rt.root, fleet=router.fleet)
+               if args.fabric == "proc" else local_buffers)
+    out["fleet_closure"] = validate_fleet_closure(buffers)
+    out["decomposition"] = decomposition(buffers)
+    trace_path = getattr(args, "trace", None)
+    if trace_path:
+        trace = export_chrome(buffers, trace_path)
+        print(f"[serve] trace: {len(trace['traceEvents'])} events -> "
+              f"{trace_path} (open in Perfetto / chrome://tracing)")
+    fb = fleet["fabric"]
+    print(f"[serve] fabric={args.fabric} fleet={router.router_id} "
+          f"policy={router.policy} live={fb['live']} "
+          f"(spawned {fb['spawned']}, retired {fb['retired']}, "
+          f"evicted {fb['evictions']})")
+    print(f"[serve] {len(done)} requests, {toks} tokens in {wall:.2f}s; "
+          f"{fb['reroutes']} reroutes; closure: "
+          f"{out['fleet_closure']['routed']} routed / "
+          f"{out['fleet_closure']['closed']} closed")
+    return out
+
+
 def serve_static(rt: Runtime, image, args) -> dict:
     """Fixed-batch baseline THROUGH the container compile path.
 
@@ -351,6 +451,26 @@ def main(argv=None) -> dict:
                     help="router placement policy (--pods > 1); prefix-hash "
                          "places on the shared-prefix digest so cache hits "
                          "land on the pod that owns the pages")
+    ap.add_argument("--fabric", choices=("none", "loopback", "proc"),
+                    default="none",
+                    help="serve over the cross-host fabric: workers speak "
+                         "the framed message protocol in-process "
+                         "(loopback) or as one OS process per pod (proc)")
+    ap.add_argument("--min-pods", type=int, default=1,
+                    help="elastic floor (--fabric): the fleet heals back "
+                         "to this many pods after evictions")
+    ap.add_argument("--max-pods", type=int, default=None,
+                    help="elastic ceiling (--fabric); default --pods")
+    ap.add_argument("--heartbeat-every", type=int, default=4,
+                    help="fabric liveness probe cadence in ticks")
+    ap.add_argument("--miss-limit", type=int, default=2,
+                    help="consecutive missed probes before eviction")
+    ap.add_argument("--scale-up-tokens", type=int, default=None,
+                    help="spawn a pod when outstanding tokens per live "
+                         "pod exceed N (--fabric)")
+    ap.add_argument("--scale-idle-ticks", type=int, default=None,
+                    help="drain+retire the newest pod after N idle ticks "
+                         "(--fabric)")
     ap.add_argument("--slots", type=int, default=8,
                     help="KV slots per replica (static: the batch size)")
     ap.add_argument("--requests", type=int, default=32)
@@ -401,6 +521,8 @@ def main(argv=None) -> dict:
                      "tier holds evicted prefix-registry pages)")
         if args.spill_pages < 0:
             args.spill_pages = None     # unbounded host store
+    if args.mode == "static" and args.fabric != "none":
+        ap.error("--fabric applies to continuous mode only")
     if args.mode == "static" and args.pods > 1:
         # never let a "static fleet" silently serve from one host: the
         # static baseline has no router tier, and comparing it against an
@@ -415,6 +537,8 @@ def main(argv=None) -> dict:
              if Path(args.image).exists() else args.image)
     if args.mode == "static":
         return serve_static(rt, image, args)
+    if args.fabric != "none":
+        return serve_fabric(rt, image, args)
     return serve_continuous(rt, image, args)
 
 

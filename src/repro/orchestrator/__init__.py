@@ -24,9 +24,19 @@ consistent-hash or prefix-hash (prefix-cache affinity) placement,
 spillover-before-reject, and router-level drains -- ``RollingDeployer``
 accepts a router and rolls the fleet pod-by-pod at >= N-1 pods of
 capacity.
+
+``FabricRouter`` (``repro.orchestrator.fabric``) takes the router
+cross-host: pods become workers behind a framed message transport
+(in-process loopback or one OS process per pod), with heartbeat liveness,
+dead-pod eviction + exactly-once re-routing of in-flight work, and an
+elastic spawn/drain/retire fleet.
 """
 
 from repro.orchestrator.deployer import RollingDeployer
+from repro.orchestrator.fabric import (FABRIC_POLICIES, FabricRouter,
+                                       PodWorker, decode_request,
+                                       encode_request, load_fleet_spans,
+                                       loopback_spawner, proc_spawner)
 from repro.orchestrator.page_pool import PagePool
 from repro.orchestrator.pod import Pod
 from repro.orchestrator.request_queue import (PRIORITIES, GenRequest,
@@ -46,6 +56,14 @@ __all__ = [
     "SlotEngine",
     "ContinuousScheduler",
     "RollingDeployer",
+    "FABRIC_POLICIES",
+    "FabricRouter",
+    "PodWorker",
+    "encode_request",
+    "decode_request",
+    "load_fleet_spans",
+    "loopback_spawner",
+    "proc_spawner",
     "latency_summary",
     "nearest_rank",
 ]

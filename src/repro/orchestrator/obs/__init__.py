@@ -39,8 +39,11 @@ from repro.orchestrator.obs.tracing import (
     TERMINAL_SPANS,
     SpanEvent,
     TraceBuffer,
+    dump_span_log,
     export_chrome,
+    load_span_log,
     validate_chrome_trace,
+    validate_fleet_closure,
     validate_span_log,
 )
 
@@ -52,6 +55,6 @@ __all__ = [
     "itl_milliticks", "observe_completion", "recompute_registry",
     "request_lifecycles", "snapshot_exemplar",
     "SPAN_KINDS", "SPAN_TRANSITIONS", "TERMINAL_SPANS", "SpanEvent",
-    "TraceBuffer", "export_chrome", "validate_chrome_trace",
-    "validate_span_log",
+    "TraceBuffer", "dump_span_log", "export_chrome", "load_span_log",
+    "validate_chrome_trace", "validate_fleet_closure", "validate_span_log",
 ]

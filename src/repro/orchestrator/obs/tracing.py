@@ -28,13 +28,14 @@ page-count/prefix-hit attributes in ``args``.
 from __future__ import annotations
 
 import json
+import os
 from collections import deque
 from dataclasses import dataclass
 from pathlib import Path
 
 SPAN_KINDS = ("submit", "route", "queue", "admit", "reject", "shed",
               "prefill", "decode_chunk", "preempt", "resume", "complete",
-              "spill", "restore")
+              "spill", "restore", "heartbeat", "evict", "reroute")
 
 # The lifecycle state machine as data: kind -> legal predecessors within
 # one (buffer, rid) span log. ``None`` means the kind may start a log:
@@ -48,12 +49,18 @@ SPAN_TRANSITIONS = {
     "route": (None,),
     "queue": ("submit",),
     "admit": ("submit", "queue"),
-    "reject": (None, "submit", "queue", "preempt"),
+    # route/reroute predecessors: the ROUTER's buffer rejects a request
+    # after recording its placement when no (surviving) member can ever
+    # fit it -- the fleet-level infeasible path
+    "reject": (None, "submit", "queue", "preempt", "route", "reroute"),
     "shed": (None, "submit", "queue", "preempt"),
     "prefill": ("admit", "resume", "spill", "restore"),
     "decode_chunk": ("prefill", "decode_chunk", "spill"),
     "preempt": ("prefill", "decode_chunk"),
-    "resume": ("preempt",),
+    # a resume may START a log: a request rerouted off a dead pod arrives
+    # at the survivor already preempted (the pod death was its implicit
+    # preemption) and its resume is the first span in the survivor's buffer
+    "resume": (None, "preempt"),
     "complete": ("prefill", "decode_chunk"),
     # spill-tier movements of the prefix registry, attributed to the
     # request whose allocation/share triggered them: spills fire under any
@@ -64,10 +71,20 @@ SPAN_TRANSITIONS = {
     "spill": ("admit", "resume", "prefill", "decode_chunk", "spill",
               "restore"),
     "restore": ("admit", "resume", "spill", "restore"),
+    # fabric-tier spans, recorded in the ROUTER's buffer only. Heartbeats
+    # accrue per member under a synthetic per-pod rid (-1 - ordinal);
+    # evict closes that member's log. Reroute is recorded under the
+    # REQUEST's rid after its route span -- a request rerouted twice
+    # (cascading pod deaths) chains reroute -> reroute.
+    "heartbeat": (None, "heartbeat"),
+    "evict": (None, "heartbeat"),
+    "reroute": ("route", "reroute"),
 }
 
 # kinds with no successors: once recorded, the (buffer, rid) log is closed
-TERMINAL_SPANS = ("reject", "shed", "complete")
+# (evict closes a fabric member's synthetic heartbeat log; replacement pods
+# get a fresh ordinal, so an evicted member's rid never records again)
+TERMINAL_SPANS = ("reject", "shed", "complete", "evict")
 
 # one tick rendered as 1000 "microseconds" so sub-tick spans (prefill) stay
 # visible at default Perfetto zoom
@@ -78,11 +95,19 @@ TICK_US = 1000
 class SpanEvent:
     """One typed point event in a request's lifecycle. ``attrs`` is a
     sorted (key, value) tuple -- hashable and deterministically ordered,
-    so span logs compare byte-for-byte across runs."""
+    so span logs compare byte-for-byte across runs.
+
+    ``wall`` is an OPTIONAL wall-clock timestamp (``time.time()``) carried
+    ALONGSIDE the tick for fabric runs where pods are real processes with
+    real clocks. It is deliberately outside ``attrs`` and excluded from
+    the determinism story: in-process runs record ``None`` everywhere so
+    span logs still compare byte-for-byte, and the recompute/validate
+    paths never read it."""
     rid: int
     name: str
     tick: int
     attrs: tuple = ()
+    wall: float | None = None
 
     def attr(self, key: str, default=None):
         for k, v in self.attrs:
@@ -110,12 +135,13 @@ class TraceBuffer:
     def dropped(self) -> int:
         return self.recorded - len(self._events)
 
-    def record(self, rid: int, name: str, tick: int, **attrs) -> None:
+    def record(self, rid: int, name: str, tick: int, *,
+               wall: float | None = None, **attrs) -> None:
         if name not in SPAN_KINDS:
             raise ValueError(f"unknown span kind {name!r}; one of {SPAN_KINDS}")
         self._events.append(SpanEvent(
             rid=int(rid), name=name, tick=int(tick),
-            attrs=tuple(sorted(attrs.items()))))
+            attrs=tuple(sorted(attrs.items())), wall=wall))
         self.recorded += 1
 
     def events(self) -> list[SpanEvent]:
@@ -185,6 +211,79 @@ def validate_span_log(buffers) -> dict:
                 prev = e
     return {"buffers": n_buffers, "requests": requests,
             "events": events}
+
+
+def dump_span_log(buffer: TraceBuffer, path: str | Path) -> Path:
+    """Persist one buffer's span log as JSON -- the per-process span file a
+    fabric worker flushes so the router-side closure check (and ``repro
+    lint``'s cross-process pooling) can read spans emitted in another
+    process. ``recorded`` rides along so ``dropped`` survives the round
+    trip and truncated logs keep skipping the start-of-log check."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    doc = {"name": buffer.name, "capacity": buffer.capacity,
+           "recorded": buffer.recorded,
+           "events": [[e.rid, e.name, e.tick, list(e.attrs), e.wall]
+                      for e in buffer.events()]}
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(doc))
+    os.replace(tmp, path)
+    return path
+
+
+def load_span_log(path: str | Path) -> TraceBuffer:
+    """Rehydrate a ``dump_span_log`` file into a TraceBuffer equivalent to
+    the one that wrote it (same name/capacity/recorded), so every
+    validator and exporter consumes local and cross-process spans through
+    one type."""
+    doc = json.loads(Path(path).read_text())
+    buf = TraceBuffer(capacity=doc["capacity"], name=doc["name"])
+    for rid, name, tick, attrs, wall in doc["events"]:
+        buf._events.append(SpanEvent(
+            rid=int(rid), name=name, tick=int(tick),
+            attrs=tuple((k, v) for k, v in attrs), wall=wall))
+    buf.recorded = int(doc["recorded"])
+    return buf
+
+
+def validate_fleet_closure(buffers) -> dict:
+    """Cross-buffer lifecycle closure: every ROUTED request must reach a
+    terminal span SOMEWHERE in the fleet, even though its lifecycle is
+    split across buffers (route/reroute in the router's, submit..complete
+    in one or more pods' -- more than one when a pod died mid-decode and
+    the request resumed on a survivor).
+
+    This is the zero-lost-requests check the fault-injection benchmark
+    gates on: a request routed to a pod that was killed and never
+    rerouted shows up here as an open lifecycle. Synthetic fabric rids
+    (negative: per-member heartbeat/evict logs) are exempt -- they close
+    per-buffer via ``evict`` and never represent user work. Buffers that
+    dropped events skip the check (the terminal may have fallen off the
+    ring). Raises ``ValueError`` naming the first open request; returns
+    summary stats."""
+    routed: dict[int, int] = {}      # rid -> reroute count
+    closed: set[int] = set()
+    truncated = False
+    for buf in buffers:
+        truncated = truncated or buf.dropped > 0
+        for e in buf.events():
+            if e.rid < 0:
+                continue
+            if e.name == "route":
+                routed.setdefault(e.rid, 0)
+            elif e.name == "reroute":
+                routed[e.rid] = routed.get(e.rid, 0) + 1
+            elif e.name in TERMINAL_SPANS:
+                closed.add(e.rid)
+    open_rids = sorted(set(routed) - closed)
+    if open_rids and not truncated:
+        raise ValueError(
+            f"fleet span closure: {len(open_rids)} routed request(s) never "
+            f"reached a terminal span (first: rid {open_rids[0]}) -- "
+            "work was lost")
+    return {"routed": len(routed), "closed": len(set(routed) & closed),
+            "rerouted": sum(1 for n in routed.values() if n),
+            "reroutes": sum(routed.values()), "truncated": truncated}
 
 
 def _x(name, ts, dur, pid, tid, rid, **args):
@@ -264,6 +363,15 @@ def export_chrome(buffers, path: str | Path | None = None) -> dict:
                                      **dict(e.attrs)))
                 elif e.name == "restore":
                     events.append(_i("restore", e.tick, pid, tid, rid,
+                                     **dict(e.attrs)))
+                elif e.name == "heartbeat":
+                    events.append(_i("heartbeat", e.tick, pid, tid, rid,
+                                     **dict(e.attrs)))
+                elif e.name == "evict":
+                    events.append(_i("evict", e.tick, pid, tid, rid,
+                                     **dict(e.attrs)))
+                elif e.name == "reroute":
+                    events.append(_i("reroute", e.tick, pid, tid, rid,
                                      **dict(e.attrs)))
                 elif e.name == "reject":
                     if baseline is not None:

@@ -32,7 +32,8 @@ class Pod:
                  decode_chunk: int = 4, paged: bool = False,
                  page_size: int = 16, n_pages: int | None = None,
                  prefix_cache: bool = False,
-                 spill_pages: int | None = 0):
+                 spill_pages: int | None = 0,
+                 pod_id: str | None = None):
         if replicas < 1:
             raise ValueError("a Pod needs at least one replica")
         self.runtime = runtime
@@ -57,7 +58,10 @@ class Pod:
         # host-RAM spill tier for evicted prefix nodes: 0 disables (evict
         # outright), None is an unbounded store, >0 caps the store's pages
         self.spill_pages = spill_pages
-        self.pod_id = f"pod-{uuid.uuid4().hex[:8]}"
+        # callers may pin the id: the fabric assigns deterministic ids
+        # (pod-0, pod-1, ...) so the consistent-hash ring and state files
+        # are reproducible across worker processes and restarts
+        self.pod_id = pod_id or f"pod-{uuid.uuid4().hex[:8]}"
         # one metrics registry + one span ring buffer per pod, shared by
         # every replica engine (labels keep the per-replica breakdown);
         # snapshots ride the state file so `ps`/`top` read live numbers

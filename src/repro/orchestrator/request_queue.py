@@ -76,6 +76,10 @@ class GenRequest:
     # (the policy's preferred pod could never fit it, another pod could)
     pod: str | None = None
     spilled: bool = False
+    # fabric-tier failover record (owned by FabricRouter): times this
+    # request was re-routed off a dead pod to a survivor (resumed via
+    # suffix re-prefill when tokens were already committed)
+    reroutes: int = 0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)

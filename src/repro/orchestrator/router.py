@@ -144,6 +144,7 @@ class PodRouter:
         # instead of rescanning every queue and slot bank
         self._outstanding = {p.pod_id: 0 for p in self.pods}
         self._rejected_seen = [0] * len(self.schedulers)
+        self._shedded_seen = [0] * len(self.schedulers)
         for p in self.pods:
             p.router = self.router_id
             p.write_state()
@@ -324,11 +325,13 @@ class PodRouter:
                 self._c_spilled.inc()
             req.pod = chosen.pod_id
             self._c_routed.inc()
-            # the route span lands in the CHOSEN pod's buffer so a request's
-            # whole lifecycle reads off one timeline in the trace viewer
-            chosen.trace.record(req.rid, "route", self.tick,
-                                pod=chosen.pod_id, policy=self.policy,
-                                spilled=req.spilled)
+            # router-tier spans live in the ROUTER's buffer: recording the
+            # route into the chosen pod's buffer meant a dying pod took the
+            # placement record down with it and fleet-wide span closure
+            # could no longer prove the request was ever routed
+            self.trace.record(req.rid, "route", self.tick,
+                              pod=chosen.pod_id, policy=self.policy,
+                              spilled=req.spilled)
             self._outstanding[chosen.pod_id] += req.max_new_tokens
             self._sched[chosen.pod_id].submit(req)
         if len(self.rejected) + len(self.shedded) != refresh_before:
@@ -367,6 +370,15 @@ class PodRouter:
                     self._outstanding[req.pod] -= req.max_new_tokens
                 rejected += 1
             self._rejected_seen[i] = len(s.rejected)
+            # deadline sheds terminate a routed request at the SCHEDULER
+            # tier just like rejections do -- without this debit a shed
+            # burst permanently over-counts the pod and shortest-queue
+            # placement routes around it forever
+            for req in s.shedded[self._shedded_seen[i]:]:
+                if req.pod in self._outstanding:
+                    self._outstanding[req.pod] -= req.max_new_tokens
+                rejected += 1
+            self._shedded_seen[i] = len(s.shedded)
         for req in done:
             # guard: a request submitted to a member scheduler directly
             # (bypassing the router) was never credited to the ledger
